@@ -1,0 +1,113 @@
+"""Analytic alpha-beta cost model for the paper's Tables 1-2.
+
+Per-device communication volumes follow the exact collective formulas of
+each parallelism (ring all-gather/reduce-scatter move size*(n-1)/n,
+all-reduce 2x), summed over the Transformer layer's matmuls; compute time is
+MNK/p on the device peak with a fixed MXU/SM efficiency.  Constants are the
+paper's testbed (V100, 4-GPU NVLink nodes on EDR InfiniBand) so the derived
+step times can be compared against the published tables; the same model with
+TPU v5e constants drives the roofline projections.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Dict, List, Tuple
+
+
+@dataclasses.dataclass(frozen=True)
+class Hw:
+    name: str
+    peak_flops: float          # per chip, matmul dtype
+    eff: float                 # achievable fraction on GEMMs
+    bw_intra: float            # bytes/s within a node/pod link
+    bw_inter: float            # bytes/s across nodes
+    intra_size: int            # chips per node
+    latency: float = 15e-6     # per collective hop
+
+
+V100 = Hw("V100-IB", 112e12, 0.35, 130e9, 12.5e9, 4)
+TPU_V5E = Hw("TPUv5e", 197e12, 0.55, 50e9, 50e9, 256, latency=1e-6)
+
+BYTES = 2  # fp16/bf16
+
+
+def _ring_bw(hw: Hw, group: int) -> float:
+    """Effective per-device ring bandwidth for a group of that size."""
+    return hw.bw_intra if group <= hw.intra_size else hw.bw_inter
+
+
+def layer_matmuls(b: int, s: int, h: int) -> List[Tuple[int, int, int]]:
+    """(M, N, K) for the paper's Transformer layer (attn qkv/proj + 4h MLP)."""
+    t = b * s
+    return [(t, h, 3 * h), (t, h, h), (t, h, 4 * h), (t, 4 * h, h)]
+
+
+def attn_flops(b: int, s: int, h: int) -> float:
+    return 2 * 2.0 * b * s * s * h  # QK^T + PV
+
+
+# ---------------------------------------------------------------------------
+# per-device comm bytes for one C = AB (forward + both backward products)
+# ---------------------------------------------------------------------------
+def comm_1d(M, N, K, p):
+    # Megatron: the col/row pair costs one fwd all-reduce of the (t, h)
+    # output + one bwd all-reduce; charged on the row-parallel matmul only
+    # (K == output h), zero on the col-parallel one.
+    if K > N:      # up-projection (col-parallel): no comm
+        return 0.0
+    ar = 2 * BYTES * M * K * (p - 1) / p
+    return 2 * ar  # fwd + bwd
+
+
+def comm_2d(M, N, K, p):
+    q = int(round(math.sqrt(p)))
+    ag_x = BYTES * (M * N / p) * (q - 1)          # gather A rows over q
+    ag_w = BYTES * (N * K / p) * (q - 1)          # gather W cols over q
+    fwd = ag_x + ag_w
+    bwd = 2 * fwd                                  # dX and dW each re-gather
+    return fwd + bwd
+
+
+def comm_3d(M, N, K, p):
+    c = round(p ** (1 / 3))
+    # Alg 1: AG A over y (size M*N/p^... gathered block M/c * N/c from c
+    # pieces), AG B over x, RS C over z.
+    ag_a = BYTES * (M * N / (c * c)) * (c - 1) / c
+    ag_b = BYTES * (N * K / (c * c)) * (c - 1) / c
+    rs_c = BYTES * (M * K / (c * c)) * (c - 1) / c
+    fwd = ag_a + ag_b + rs_c
+    return 3 * fwd  # fwd + dX + dW have the same structure (Alg 2)
+
+
+COMM = {"1d": comm_1d, "2d": comm_2d, "3d": comm_3d}
+
+
+def n_collectives(strategy: str) -> int:
+    return {"1d": 2, "2d": 4, "3d": 9}[strategy]
+
+
+def step_time(strategy: str, hw: Hw, p: int, b: int, s: int, h: int,
+              n_layers: int = 4) -> Dict[str, float]:
+    """Derived fwd+bwd time for n_layers Transformer layers on p chips."""
+    mm = layer_matmuls(b, s, h)
+    flops = sum(2.0 * M * N * K for M, N, K in mm) * 3        # fwd + 2 bwd
+    flops += attn_flops(b, s, h) * 3
+    t_comp = flops / p / (hw.peak_flops * hw.eff)
+
+    if strategy == "3d":
+        c = round(p ** (1 / 3))
+        group = c
+    elif strategy == "2d":
+        group = int(round(math.sqrt(p)))
+    else:
+        group = p
+    bw = _ring_bw(hw, group)
+    comm = sum(COMM[strategy](M, N, K, p) for M, N, K in mm)
+    t_comm = comm / bw + n_collectives(strategy) * len(mm) * \
+        hw.latency * math.log2(max(group, 2))
+
+    per_layer = t_comp + t_comm
+    return {"t_layer": per_layer, "t_total": per_layer * n_layers,
+            "t_comp": t_comp * n_layers, "t_comm": t_comm * n_layers,
+            "comm_bytes": comm * n_layers}

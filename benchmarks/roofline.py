@@ -1,0 +1,105 @@
+"""Roofline analysis (deliverable g): three terms per (arch x shape x mesh)
+from the dry-run's compiled artifacts.
+
+    compute term    = HLO_FLOPs_per_device / peak_FLOP/s
+    memory term     = HLO_bytes_per_device / HBM_bw
+    collective term = collective_bytes_per_device / link_bw
+
+cost_analysis() on the SPMD-compiled module reports per-device quantities,
+so the `chips` division of the assignment formulas is already applied.
+Hardware constants: TPU v5e — 197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s/link.
+"""
+from __future__ import annotations
+
+import json
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+LINK_BW = 50e9
+
+# MODEL_FLOPS = 6 N D (dense) / 6 N_active D per the assignment
+from repro.config import SHAPES  # noqa: E402
+from repro.configs.registry import get  # noqa: E402
+
+
+_COUNTS = {}
+
+
+def model_flops(arch: str, shape_name: str, n_chips: int) -> float:
+    cfg = get(arch)
+    shape = SHAPES[shape_name]
+    if arch not in _COUNTS:
+        from repro.models.transformer import param_counts
+        _COUNTS[arch] = param_counts(cfg)
+    n = _COUNTS[arch][1]
+    if shape.kind == "train":
+        tokens = shape.seq_len * shape.global_batch
+        return 6.0 * n * tokens / n_chips
+    if shape.kind == "prefill":
+        tokens = shape.seq_len * shape.global_batch
+        return 2.0 * n * tokens / n_chips
+    tokens = shape.global_batch          # decode: one token per request
+    return 2.0 * n * tokens / n_chips
+
+
+def analyse(path: str):
+    rows = []
+    seen = set()
+    for line in open(path):
+        r = json.loads(line)
+        key = (r["arch"], r["shape"], r.get("multi_pod"), r.get("strategy"))
+        if key in seen:
+            continue
+        seen.add(key)
+        if r["status"] != "OK":
+            if r["status"] == "SKIP":
+                rows.append({"arch": r["arch"], "shape": r["shape"],
+                             "mesh_tag": "2pod" if r.get("multi_pod") else "1pod",
+                             "skip": r.get("reason", "skip")})
+            continue
+        n_chips = 1
+        for v in r["mesh"].values():
+            n_chips *= v
+        t_comp = r["cost"]["flops"] / PEAK_FLOPS
+        t_mem = r["cost"]["bytes_accessed"] / HBM_BW
+        t_coll = r["collectives"]["bytes_per_device"] / LINK_BW
+        dom = max(("compute", t_comp), ("memory", t_mem),
+                  ("collective", t_coll), key=lambda kv: kv[1])[0]
+        mf = model_flops(r["arch"], r["shape"], n_chips)
+        rows.append({
+            "arch": r["arch"], "shape": r["shape"],
+            "mesh_tag": "2pod" if r.get("multi_pod") else "1pod",
+            "n_chips": n_chips,
+            "t_compute_s": t_comp, "t_memory_s": t_mem,
+            "t_collective_s": t_coll, "dominant": dom,
+            "model_flops": mf,
+            "useful_frac": mf / max(r["cost"]["flops"], 1),
+            "peak_gib": r["memory"]["peak_gib"],
+            "fits_16gib": r["memory"]["peak_gib"] <= 16.0,
+        })
+    return rows
+
+
+def fmt_row(r) -> str:
+    if "skip" in r:
+        return f"SKIP ({r['skip']})"
+    return (f"compute={r['t_compute_s']:.3e}s memory={r['t_memory_s']:.3e}s "
+            f"collective={r['t_collective_s']:.3e}s dominant={r['dominant']} "
+            f"useful_flops_frac={r['useful_frac']:.2f} "
+            f"peak={r['peak_gib']:.2f}GiB fits={r['fits_16gib']}")
+
+
+def main():
+    path = sys.argv[1] if len(sys.argv) > 1 else os.path.join(
+        os.path.dirname(__file__), "..", "results_dryrun.jsonl")
+    for r in analyse(path):
+        tag = f"{r['arch']:22s} {r['shape']:12s} {r['mesh_tag']}"
+        print(f"{tag}  {fmt_row(r)}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,62 @@
+"""The paper's Algorithm 1 on a real 2x2x2 processing cube, end to end.
+
+Relaunches itself with 8 host devices if needed, places A/B in the
+load-balanced layout of §3.1.1, runs the all-gather/all-gather/
+reduce-scatter matmul, and verifies the result + both backward products
+(Algorithm 2) against the dense oracle — the minimal faithful demonstration
+of the paper's contribution.
+"""
+import os
+import subprocess
+import sys
+
+if "XLA_FLAGS" not in os.environ:
+    env = dict(os.environ, XLA_FLAGS="--xla_force_host_platform_device_count=8")
+    sys.exit(subprocess.call([sys.executable] + sys.argv, env=env))
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import ops3d
+from repro.core.topology import make_layout
+
+
+def main():
+    lay = make_layout(1, 1, 8, "3d")
+    print(f"processing cube (x, y, z) = {lay.cube} on {lay.n_devices} devices")
+
+    M, N, K = 32, 64, 48
+    ks = jax.random.split(jax.random.key(0), 3)
+    A = jax.random.normal(ks[0], (4, M, N))          # (batch, seq, hidden)
+    Bw = jax.random.normal(ks[1], (N, K))
+    dC = jax.random.normal(ks[2], (4, M, K))
+
+    # balanced placement: A_ijl rows over (x ⊗ y), cols over z; B_lji rows
+    # over z, cols over (y ⊗ x)   (paper Fig. 4a)
+    As = jax.device_put(A, lay.sharding(ops3d._x_spec(lay, "y", "z")))
+    Bs = jax.device_put(Bw, lay.sharding(ops3d._w_spec("y", "z")))
+    for name, arr in (("A", As), ("B", Bs)):
+        shard = arr.addressable_shards[0]
+        print(f"{name}: global {arr.shape} -> per-device {shard.data.shape} "
+              f"({arr.sharding.spec})")
+
+    C = jax.jit(lambda a, b: ops3d.matmul3d(lay, "y", "z", a, b))(As, Bs)
+    print(f"C: global {C.shape} sharded {C.sharding.spec} "
+          f"(directions exchanged: seq y->z, features on y)")
+    err = float(jnp.abs(C - A @ Bw).max())
+    print(f"forward  max|err| vs dense = {err:.2e}")
+
+    dA, dB = jax.jit(jax.grad(
+        lambda a, b: jnp.sum(ops3d.matmul3d(lay, "y", "z", a, b) * dC),
+        (0, 1)))(As, Bs)
+    e1 = float(jnp.abs(dA - dC @ Bw.T).max())
+    e2 = float(jnp.abs(dB - (A.reshape(-1, N).T @ dC.reshape(-1, K))).max())
+    print(f"backward max|err|: dA={e1:.2e}  dB={e2:.2e}  (Algorithm 2)")
+    assert max(err, e1, e2) < 1e-3
+    print("OK: Algorithms 1-2 verified on the cube")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,37 @@
+"""End-to-end training driver: a ~100M-parameter llama-family model trained
+for a few hundred steps through the full stack (data pipeline -> 3-D
+parallel model -> AdamW -> checkpointing).
+
+Default is a CPU-friendly ~10M config with 120 steps (a few minutes); pass
+--full for the ~100M / 300-step run (hours on this CPU container, the real
+target being a TPU slice where the identical entrypoint runs the full mesh).
+"""
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.launch.train import main as train_main  # noqa: E402
+
+
+def main():
+    full = "--full" in sys.argv
+    ckpt = os.path.join(os.path.dirname(__file__), "_ckpt_e2e")
+    if full:
+        # ~101M params: 8 layers, d=768, ff=2048, 32k vocab
+        args = ["--arch", "tinyllama-1.1b", "--layers", "8",
+                "--d-model", "768", "--steps", "300", "--batch", "16",
+                "--seq", "512", "--lr", "3e-4", "--warmup", "30",
+                "--log-every", "10", "--ckpt-dir", ckpt, "--ckpt-every", "100"]
+    else:
+        args = ["--arch", "tinyllama-1.1b", "--reduced", "--layers", "2",
+                "--d-model", "256", "--steps", "120", "--batch", "16",
+                "--seq", "128", "--lr", "1e-3", "--warmup", "10",
+                "--log-every", "20", "--ckpt-dir", ckpt, "--ckpt-every", "60"]
+    losses = train_main(args)
+    assert losses[-1] < losses[0], "loss did not decrease"
+    print(f"e2e OK: {losses[0]:.3f} -> {losses[-1]:.3f}; checkpoints in {ckpt}")
+
+
+if __name__ == "__main__":
+    main()

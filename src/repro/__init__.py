@@ -1,0 +1,7 @@
+"""repro: 3-D tensor model parallelism for huge neural networks, in JAX.
+
+Reproduction of Bian, Xu, Wang, You — "Maximizing Parallelism in Distributed
+Training for Huge Neural Networks" (2021), extended to the 10 assigned
+architectures with a multi-pod dry-run and roofline harness.
+"""
+__version__ = "1.0.0"

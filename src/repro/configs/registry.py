@@ -1,0 +1,52 @@
+"""Architecture registry: the 10 assigned architectures (+ the paper's own
+transformer).  Every config cites its source in ``source``.
+
+Per-arch mesh-cube overrides (``ARCH_CUBE``) keep divisibility and memory
+constraints satisfied — e.g. deepseek-v3's routed experts need the widest
+expert sharding, so its cube drops the x axis in favour of dp-based expert
+parallelism (DESIGN.md §6).
+"""
+from __future__ import annotations
+
+import importlib
+from typing import Dict, Optional, Tuple
+
+from ..config import ModelConfig
+
+ARCH_IDS = [
+    "gemma-2b", "qwen3-4b", "internvl2-2b", "tinyllama-1.1b",
+    "whisper-medium", "zamba2-1.2b", "mixtral-8x7b", "xlstm-350m",
+    "moonshot-v1-16b-a3b", "deepseek-v3-671b",
+]
+
+_MODULES = {a: a.replace("-", "_").replace(".", "_") for a in ARCH_IDS}
+_MODULES["paper-transformer"] = "paper_transformer"
+
+# per-arch (x, y, z) cube for a 16-wide model axis (single pod).
+# default (2, 2, 4); overrides noted in DESIGN.md.
+ARCH_CUBE: Dict[str, Tuple[int, int, int]] = {
+    "deepseek-v3-671b": (1, 4, 4),   # x->1: widest (dp,y) expert sharding
+    "moonshot-v1-16b-a3b": (1, 4, 4),
+    "xlstm-350m": (2, 2, 4),
+}
+
+# long_500k applicability (sub-quadratic attention required)
+LONG_OK = {"zamba2-1.2b", "xlstm-350m", "mixtral-8x7b"}
+
+
+def get(arch: str) -> ModelConfig:
+    mod = importlib.import_module(f"repro.configs.{_MODULES[arch]}")
+    return mod.CONFIG
+
+
+def cube_for(arch: str, n_model: int = 16,
+             strategy: str = "3d") -> Optional[Tuple[int, int, int]]:
+    if strategy != "3d":
+        return None
+    if n_model == 16 and arch in ARCH_CUBE:
+        return ARCH_CUBE[arch]
+    return None
+
+
+def all_configs() -> Dict[str, ModelConfig]:
+    return {a: get(a) for a in ARCH_IDS}

@@ -1,0 +1,207 @@
+"""Layer-level parallel primitives: strategy-dispatching linear, norms,
+embedding and vocab-parallel cross-entropy.
+
+``plinear`` is the single entry point model code uses; it dispatches to the
+paper's 3-D algorithm, or the 1-D (Megatron) / 2-D (Optimus) baselines, and
+returns the updated direction state (paper §3.2 direction exchange).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.sharding import PartitionSpec as P
+
+from . import ops1d, ops2d, ops3d
+from .params import Param
+from .topology import Dirs, Layout
+
+wsc = jax.lax.with_sharding_constraint
+
+
+# ---------------------------------------------------------------------------
+# Activation / weight spec helpers (strategy-aware)
+# ---------------------------------------------------------------------------
+def act_spec(layout: Layout, dirs: Dirs) -> P:
+    if layout.strategy == "3d":
+        return ops3d._x_spec(layout, dirs.in_ax, dirs.out_ax)
+    if layout.strategy == "2d":
+        return ops2d._act_spec(layout)
+    return ops1d._act_rep_spec(layout)
+
+
+def act_spec_decode(layout: Layout, dirs: Dirs) -> P:
+    if layout.strategy == "3d":
+        return P(layout.batch_spec(), None, dirs.out_ax)
+    if layout.strategy == "2d":
+        return P(layout.batch_spec(), None, "z")
+    return P(layout.batch_spec(), None, None)
+
+
+def weight_param(layout: Layout, dirs: Dirs, h: int, f: int, *,
+                 kind: str = "first", shard_f: bool = True,
+                 dtype=jnp.bfloat16, fsdp: bool = False, init_scale=1.0) -> Param:
+    """Declare an (h, f) weight with the strategy's placement.
+
+    kind: 'first' or 'second' — only relevant to the 1-D baseline
+    (column-parallel vs row-parallel).
+    fsdp: additionally shard over 'dp' (ZeRO-3 style, gathered on use).
+    """
+    if layout.strategy == "3d":
+        if shard_f and layout.inference_opt:
+            spec = P(dirs.out_ax, dirs.in_ax)     # x-replicated decode layout
+        else:
+            spec = ops3d.w_spec3d(dirs.in_ax, dirs.out_ax, shard_f)
+    elif layout.strategy == "2d":
+        spec = P("y", "z") if shard_f else P("y", None)
+    else:
+        spec = P(None, "z") if kind == "first" else P("z", None)
+        if not shard_f:
+            spec = P(None, None)
+    if fsdp:
+        # attach 'dp' to the row (contraction) dim if free, else the col dim
+        rows, cols = spec
+        if rows is None:
+            spec = P("dp", cols)
+        elif cols is None:
+            spec = P(rows, "dp")
+        else:
+            rows = (rows,) if isinstance(rows, str) else tuple(rows)
+            spec = P(rows + ("dp",), cols)
+    return Param((h, f), spec, dtype=dtype, fan_axis=-2, scale=init_scale)
+
+
+def bias_param(layout: Layout, dirs: Dirs, f: int, *, kind: str = "first",
+               shard_f: bool = True, dtype=jnp.bfloat16) -> Param:
+    if not shard_f:
+        return Param((f,), P(None), dtype=dtype, init="zeros")
+    if layout.strategy == "3d":
+        spec = P(dirs.in_ax)
+    elif layout.strategy == "2d":
+        spec = P("z")
+    else:
+        spec = P("z") if kind == "first" else P(None)
+    return Param((f,), spec, dtype=dtype, init="zeros")
+
+
+def plinear(layout: Layout, dirs: Dirs, x, w, b=None, *, kind: str = "first",
+            shard_f: bool = True, decode: bool = False) -> Tuple[jax.Array, Dirs]:
+    """Parallel linear y = x @ w (+ b). Returns (y, new_dirs)."""
+    if layout.strategy == "3d":
+        if layout.gspmd_linears and not decode:
+            # beyond-paper ablation: identical tensor placement, XLA-chosen
+            # collective schedule (sharding constraints only)
+            y = _gspmd_mm(x, w)
+            y = wsc(y, layout.sharding(
+                ops3d.y_spec3d(layout, dirs.in_ax, dirs.out_ax, shard_f)))
+        elif decode:
+            y = ops3d.matmul3d_decode(layout, dirs.in_ax, dirs.out_ax, x, w, shard_f)
+        else:
+            y = ops3d.matmul3d(layout, dirs.in_ax, dirs.out_ax, x, w, shard_f)
+        ndirs = dirs.swap()
+    elif layout.strategy == "2d":
+        y = ops2d.matmul2d(layout, x, w) if shard_f else _gspmd_mm(x, w)
+        ndirs = dirs
+    else:  # 1d
+        if shard_f:
+            y = (ops1d.linear1d_col(layout, x, w) if kind == "first"
+                 else ops1d.linear1d_row(layout, x, w))
+        else:
+            y = _gspmd_mm(x, w)
+        ndirs = dirs
+    if b is not None:
+        # matrix-vector add (paper Alg. 7/8): the bias is sharded to match the
+        # output's feature split, so the add is comm-free; its gradient
+        # reduction is the GSPMD dual of the diagonal-storage reduce-scatter.
+        y = y + b.astype(y.dtype)
+    return y, ndirs
+
+
+def _gspmd_mm(x, w):
+    return jnp.einsum("...sh,hf->...sf", x, w,
+                      preferred_element_type=jnp.float32).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Norms (3-D matrix-vector ops: moments reduce over the hidden split axis;
+# GSPMD emits exactly the paper's psum over out_ax)
+# ---------------------------------------------------------------------------
+def norm_param(layout: Layout, dirs: Dirs, h: int, *, init="ones",
+               dtype=jnp.bfloat16) -> Param:
+    if layout.strategy == "3d":
+        spec = P(dirs.out_ax)
+    elif layout.strategy == "2d":
+        spec = P("z")
+    else:
+        spec = P(None)
+    return Param((h,), spec, dtype=dtype, init=init)
+
+
+def rmsnorm(x, gamma, eps: float = 1e-6, zero_centered: bool = False):
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps)
+    g = gamma.astype(jnp.float32)
+    if zero_centered:
+        g = g + 1.0
+    return (y * g).astype(x.dtype)
+
+
+def layernorm(x, gamma, beta, eps: float = 1e-5):
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.mean((xf - mu) ** 2, axis=-1, keepdims=True)
+    y = (xf - mu) * jax.lax.rsqrt(var + eps)
+    return (y * gamma.astype(jnp.float32) + beta.astype(jnp.float32)).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Embedding + vocab-parallel cross entropy
+# ---------------------------------------------------------------------------
+def embed_param(layout: Layout, dirs: Dirs, vocab: int, h: int,
+                dtype=jnp.bfloat16) -> Param:
+    if layout.strategy == "3d":
+        spec = ops3d.embed_table_spec(dirs.in_ax, dirs.out_ax)
+    elif layout.strategy == "2d":
+        spec = P("y", "z")
+    else:
+        spec = P("z", None)
+    return Param((vocab, h), spec, dtype=dtype, init="embed", scale=1.0)
+
+
+def embed_lookup(layout: Layout, dirs: Dirs, ids, table, decode: bool = False):
+    """ids (B, S) -> activations in the entry layout."""
+    if layout.strategy == "3d" and not decode:
+        return ops3d.embedding3d(layout, dirs.in_ax, dirs.out_ax, ids, table)
+    # decode path & baselines: GSPMD take (XLA inserts the vocab psum)
+    out = jnp.take(table, ids, axis=0)
+    spec = act_spec_decode(layout, dirs) if decode else act_spec(layout, dirs)
+    return wsc(out, layout.sharding(spec))
+
+
+def logits_spec(layout: Layout, dirs: Dirs, decode: bool = False) -> P:
+    """Sharding of lm-head output (B, S, V)."""
+    if layout.strategy == "3d":
+        seq = None if decode else ops3d._seq_spec(layout, dirs.out_ax)
+        return P(layout.batch_spec(), seq, dirs.in_ax)
+    if layout.strategy == "2d":
+        return P(layout.batch_spec(), None if decode else "y", "z")
+    return P(layout.batch_spec(), None, "z")
+
+
+def cross_entropy(logits, labels, mask=None):
+    """Vocab-parallel cross entropy: logits may be sharded on the vocab dim;
+    the reductions below lower to the paper's psum over the vocab split."""
+    lf = logits.astype(jnp.float32)
+    m = jax.lax.stop_gradient(jnp.max(lf, axis=-1, keepdims=True))
+    shifted = lf - m
+    lse = jnp.log(jnp.sum(jnp.exp(shifted), axis=-1)) + m[..., 0]
+    picked = jnp.take_along_axis(lf, labels[..., None], axis=-1)[..., 0]
+    nll = lse - picked
+    if mask is not None:
+        nll = nll * mask
+        return jnp.sum(nll) / jnp.maximum(jnp.sum(mask), 1)
+    return jnp.mean(nll)

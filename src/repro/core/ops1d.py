@@ -1,0 +1,106 @@
+"""Megatron-LM style 1-D tensor parallelism (baseline, paper §2.2 [17]).
+
+Model degree n lives on the 'z' mesh axis (cube (1,1,n)).  Activations are
+replicated across the model axes; weights split along a single dimension:
+
+  column-parallel:  w  P(None, 'z')   y = x @ w          (no fwd comm)
+  row-parallel:     w  P('z', None)   y = psum_z(x @ w)  (fwd all-reduce)
+
+Backward of the column linear all-reduces dx; dw syncs over data axes.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.sharding import PartitionSpec as P
+
+from .topology import Layout
+from .ops3d import _mm, _shmap, _grad_sync_axes
+
+
+def _act_rep_spec(layout: Layout) -> P:
+    seq = tuple(a for a in layout.seq_axes if layout.size(a) > 1) or None
+    return P(layout.batch_spec(), seq, None)
+
+
+def _act_col_spec(layout: Layout) -> P:
+    seq = tuple(a for a in layout.seq_axes if layout.size(a) > 1) or None
+    return P(layout.batch_spec(), seq, "z")
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(0,))
+def linear1d_col(layout: Layout, x, w):
+    """x: (B,S,H) replicated-over-model -> y: (B,S,F) split over 'z'."""
+    def body(x, w):
+        return _mm(x, w)
+    return _shmap(layout, body, (_act_rep_spec(layout), P(None, "z")),
+                  _act_col_spec(layout))(x, w)
+
+
+def _col_fwd(layout, x, w):
+    return linear1d_col(layout, x, w), (x, w)
+
+
+def _col_bwd(layout, res, dc):
+    x, w = res
+    sync = _grad_sync_axes(layout)
+
+    def dx_body(dc, w):
+        dxp = jnp.einsum("bsf,hf->bsh", dc, w,
+                         preferred_element_type=jnp.float32).astype(dc.dtype)
+        return lax.psum(dxp, "z")
+
+    def dw_body(x, dc):
+        dwp = jnp.einsum("bsh,bsf->hf", x, dc, preferred_element_type=jnp.float32)
+        if sync:
+            dwp = lax.psum(dwp, sync)
+        return dwp.astype(x.dtype)
+
+    dx = _shmap(layout, dx_body, (_act_col_spec(layout), P(None, "z")),
+                _act_rep_spec(layout))(dc, w)
+    dw = _shmap(layout, dw_body, (_act_rep_spec(layout), _act_col_spec(layout)),
+                P(None, "z"))(x, dc)
+    return dx, dw
+
+
+linear1d_col.defvjp(_col_fwd, _col_bwd)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(0,))
+def linear1d_row(layout: Layout, x, w):
+    """x: (B,S,F) split over 'z' -> y: (B,S,H) replicated (fwd all-reduce)."""
+    def body(x, w):
+        return lax.psum(_mm(x, w), "z")
+    return _shmap(layout, body, (_act_col_spec(layout), P("z", None)),
+                  _act_rep_spec(layout))(x, w)
+
+
+def _row_fwd(layout, x, w):
+    return linear1d_row(layout, x, w), (x, w)
+
+
+def _row_bwd(layout, res, dc):
+    x, w = res
+    sync = _grad_sync_axes(layout)
+
+    def dx_body(dc, w):
+        return jnp.einsum("bsh,fh->bsf", dc, w,
+                          preferred_element_type=jnp.float32).astype(dc.dtype)
+
+    def dw_body(x, dc):
+        dwp = jnp.einsum("bsf,bsh->fh", x, dc, preferred_element_type=jnp.float32)
+        if sync:
+            dwp = lax.psum(dwp, sync)
+        return dwp.astype(x.dtype)
+
+    dx = _shmap(layout, dx_body, (_act_rep_spec(layout), P("z", None)),
+                _act_col_spec(layout))(dc, w)
+    dw = _shmap(layout, dw_body, (_act_col_spec(layout), _act_rep_spec(layout)),
+                P("z", None))(x, dc)
+    return dx, dw
+
+
+linear1d_row.defvjp(_row_fwd, _row_bwd)

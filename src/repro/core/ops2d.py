@@ -1,0 +1,72 @@
+"""Optimus / SUMMA-style 2-D tensor parallelism (baseline, paper §2.2 [21]).
+
+Model degree q*q lives on the ('y','z') axes (cube (1,q,q)).  Activations and
+weights are both blocked (q, q):
+
+  x : (B,S,H)  P(batch, 'y', 'z')      # seq rows over y, hidden cols over z
+  w : (H,F)    P('y', 'z')
+
+Forward C = AB: all-gather x along 'z' (full H rows), all-gather w along 'y'
+(full H cols), local matmul -> C blocked (y, z) with no reduction needed.
+This is the gather-formulated SUMMA: per-device communication volume equals
+the broadcast-round formulation (O(P^{-1/2}) bandwidth), with the same
+blocked storage as Optimus.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.sharding import PartitionSpec as P
+
+from .topology import Layout
+from .ops3d import _mm, _shmap, _grad_sync_axes
+
+
+def _act_spec(layout: Layout) -> P:
+    seq = tuple(a for a in (*layout.seq_axes, "y") if layout.size(a) > 1) or None
+    return P(layout.batch_spec(), seq, "z")
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(0,))
+def matmul2d(layout: Layout, x, w):
+    def body(x, w):
+        xg = lax.all_gather(x, "z", axis=2, tiled=True)    # (b, s/q, H)
+        wg = lax.all_gather(w, "y", axis=0, tiled=True)    # (H, f/q)
+        return _mm(xg, wg)                                 # (b, s/q, f/q)
+    return _shmap(layout, body, (_act_spec(layout), P("y", "z")),
+                  _act_spec(layout))(x, w)
+
+
+def _fwd(layout, x, w):
+    return matmul2d(layout, x, w), (x, w)
+
+
+def _bwd(layout, res, dc):
+    x, w = res
+    sync = _grad_sync_axes(layout)
+
+    def dx_body(dc, w):
+        dcg = lax.all_gather(dc, "z", axis=2, tiled=True)   # (b, s/q, F)
+        wg = lax.all_gather(w, "z", axis=1, tiled=True)     # (h/q, F)
+        return jnp.einsum("bsf,hf->bsh", dcg, wg,
+                          preferred_element_type=jnp.float32).astype(dc.dtype)
+
+    def dw_body(x, dc):
+        xg = lax.all_gather(x, "y", axis=1, tiled=True)     # (b, S', h/q)
+        dcg = lax.all_gather(dc, "y", axis=1, tiled=True)   # (b, S', f/q)
+        dwp = jnp.einsum("bsh,bsf->hf", xg, dcg, preferred_element_type=jnp.float32)
+        if sync:
+            dwp = lax.psum(dwp, sync)
+        return dwp.astype(x.dtype)
+
+    dx = _shmap(layout, dx_body, (_act_spec(layout), P("y", "z")),
+                _act_spec(layout))(dc, w)
+    dw = _shmap(layout, dw_body, (_act_spec(layout), _act_spec(layout)),
+                P("y", "z"))(x, dc)
+    return dx, dw
+
+
+matmul2d.defvjp(_fwd, _bwd)

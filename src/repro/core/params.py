@@ -1,0 +1,104 @@
+"""Abstract parameter trees: shape + dtype + PartitionSpec + init rule.
+
+Models declare nested dicts of ``Param``; the same tree materializes as
+  * random arrays              (init_params)          — smoke tests / training
+  * jax.ShapeDtypeStruct       (abstract_arrays)      — dry-run lowering
+  * NamedSharding trees        (shardings)            — in_shardings for jit
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from .topology import Layout
+
+
+@dataclasses.dataclass(frozen=True)
+class Param:
+    shape: Tuple[int, ...]
+    spec: P
+    dtype: Any = jnp.bfloat16
+    init: str = "fan_in"        # fan_in | normal | zeros | ones | embed
+    fan_axis: int = -2          # contraction axis for fan_in scaling
+    scale: float = 1.0
+
+    @property
+    def size(self) -> int:
+        return math.prod(self.shape)
+
+
+def is_param(x) -> bool:
+    return isinstance(x, Param)
+
+
+def tree_map_params(f, tree):
+    return jax.tree.map(f, tree, is_leaf=is_param)
+
+
+def init_params(tree, key, dtype=None):
+    """Materialize random arrays for a Param tree (layer-stacked dims included)."""
+    leaves, treedef = jax.tree.flatten(tree, is_leaf=is_param)
+    keys = jax.random.split(key, len(leaves))
+
+    def one(p: Param, k):
+        dt = dtype or p.dtype
+        if p.init == "zeros":
+            return jnp.zeros(p.shape, dt)
+        if p.init == "ones":
+            return jnp.ones(p.shape, dt)
+        if p.init == "neg_ones":
+            return jnp.full(p.shape, -1, dt)
+        if p.init == "embed":
+            return (jax.random.normal(k, p.shape, jnp.float32) * p.scale).astype(dt)
+        if p.init == "normal":
+            return (jax.random.normal(k, p.shape, jnp.float32) * p.scale).astype(dt)
+        # fan_in
+        fan = p.shape[p.fan_axis] if p.shape else 1
+        std = p.scale / math.sqrt(max(fan, 1))
+        return (jax.random.normal(k, p.shape, jnp.float32) * std).astype(dt)
+
+    return treedef.unflatten([one(p, k) for p, k in zip(leaves, keys)])
+
+
+def abstract_arrays(tree, layout: Optional[Layout] = None):
+    """ShapeDtypeStructs (with shardings when a layout is given) for dry-runs."""
+    def one(p: Param):
+        if layout is None:
+            return jax.ShapeDtypeStruct(p.shape, p.dtype)
+        return jax.ShapeDtypeStruct(p.shape, p.dtype,
+                                    sharding=NamedSharding(layout.mesh, p.spec))
+    return tree_map_params(one, tree)
+
+
+def shardings(tree, layout: Layout):
+    return tree_map_params(lambda p: NamedSharding(layout.mesh, p.spec), tree)
+
+
+def specs(tree):
+    return tree_map_params(lambda p: p.spec, tree)
+
+
+def count_params(tree) -> int:
+    return sum(p.size for p in jax.tree.leaves(tree, is_leaf=is_param))
+
+
+def param_bytes(tree) -> int:
+    return sum(p.size * np.dtype(p.dtype).itemsize
+               for p in jax.tree.leaves(tree, is_leaf=is_param))
+
+
+def stack(p: Param, n: int) -> Param:
+    """Stack a Param for scan-over-layers: prepend the layer dim (unsharded)."""
+    return dataclasses.replace(
+        p, shape=(n, *p.shape), spec=P(None, *(p.spec or ())),
+        fan_axis=p.fan_axis if p.fan_axis < 0 else p.fan_axis + 1)
+
+
+def stack_tree(tree, n: int):
+    return tree_map_params(lambda p: stack(p, n), tree)

@@ -1,0 +1,1 @@
+from .pipeline import DataConfig, TokenStream, shard_batch, write_packed_tokens

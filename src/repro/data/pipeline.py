@@ -1,0 +1,109 @@
+"""Data pipeline: synthetic LM stream + packed-binary file dataset.
+
+Both produce already-sharded global arrays (jax.make_array_from_callback) so
+each host only materializes its addressable shard — the multi-host path and
+the single-host path are the same code.
+"""
+from __future__ import annotations
+
+import dataclasses
+import os
+from typing import Iterator, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..config import Family, ModelConfig, ShapeConfig
+from ..core.topology import Layout
+
+
+@dataclasses.dataclass
+class DataConfig:
+    kind: str = "synthetic"         # synthetic | file
+    path: str = ""                  # packed .npy/.bin token file
+    seed: int = 0
+
+
+class TokenStream:
+    """Iterator of train batches {"tokens", "labels"} (+ modality stubs)."""
+
+    def __init__(self, cfg: ModelConfig, layout: Layout, shape: ShapeConfig,
+                 data: Optional[DataConfig] = None):
+        self.cfg, self.layout, self.shape = cfg, layout, shape
+        self.data = data or DataConfig()
+        self.rng = np.random.default_rng(self.data.seed)
+        self._file_tokens = None
+        if self.data.kind == "file":
+            self._file_tokens = np.load(self.data.path, mmap_mode="r")
+            self._pos = 0
+
+    def _next_tokens(self, b: int, s: int) -> np.ndarray:
+        if self._file_tokens is not None:
+            need = b * (s + 1)
+            total = len(self._file_tokens)
+            if self._pos + need > total:
+                self._pos = 0
+            flat = np.asarray(self._file_tokens[self._pos:self._pos + need])
+            self._pos += need
+            return flat.reshape(b, s + 1).astype(np.int32) % self.cfg.vocab
+        # synthetic: zipf-ish distribution so losses are non-trivial
+        z = self.rng.zipf(1.3, size=(b, s + 1)).astype(np.int64)
+        return (z % self.cfg.vocab).astype(np.int32)
+
+    def __iter__(self) -> Iterator[dict]:
+        return self
+
+    def __next__(self) -> dict:
+        b, s = self.shape.global_batch, self.shape.seq_len
+        cfg = self.cfg
+        if cfg.family == Family.VLM:
+            s_text = s - cfg.n_vision_tokens
+            toks = self._next_tokens(b, s_text)
+            batch = {
+                "tokens": toks[:, :-1],
+                "labels": toks[:, 1:],
+                "patch_embeds": self.rng.standard_normal(
+                    (b, cfg.n_vision_tokens, cfg.d_model)).astype(np.float32),
+            }
+        elif cfg.family == Family.AUDIO:
+            toks = self._next_tokens(b, s)
+            batch = {
+                "tokens": toks[:, :-1],
+                "labels": toks[:, 1:],
+                "frames": self.rng.standard_normal(
+                    (b, cfg.encoder.n_frames, cfg.d_model)).astype(np.float32),
+            }
+        else:
+            toks = self._next_tokens(b, s)
+            batch = {"tokens": toks[:, :-1], "labels": toks[:, 1:]}
+        return shard_batch(batch, self.cfg, self.layout)
+
+
+def shard_batch(batch: dict, cfg: ModelConfig, layout: Layout) -> dict:
+    """Place a host batch onto the mesh with the model's input shardings."""
+    from ..models.transformer import _token_seq_spec, entry_dirs
+    from ..core.linear3d import act_spec
+    from jax.sharding import PartitionSpec as P
+    dirs = entry_dirs()
+    tok_spec = _token_seq_spec(layout, dirs)
+    out = {}
+    for k, v in batch.items():
+        if k in ("tokens", "labels"):
+            spec = tok_spec
+        elif k == "frames":
+            spec = act_spec(layout, dirs)
+            v = v.astype(jnp.bfloat16)
+        elif k == "patch_embeds":
+            spec = P(layout.batch_spec(), None, None)
+            v = v.astype(jnp.bfloat16)
+        else:
+            spec = P(layout.batch_spec())
+        out[k] = jax.device_put(jnp.asarray(v), layout.sharding(spec))
+    return out
+
+
+def write_packed_tokens(path: str, tokens: np.ndarray):
+    """Persist a packed token file usable with DataConfig(kind='file')."""
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    np.save(path, tokens.astype(np.int32))

@@ -1,0 +1,72 @@
+"""Jit'd wrappers over the Pallas kernels + integration hooks.
+
+``enable_kernels(interpret=...)`` installs the Pallas local matmul into the
+3-D ops (ops3d.set_local_matmul) so every Algorithm-1 island computes its
+local shard product on the MXU kernel.  On CPU the kernels run in interpret
+mode; on TPU interpret=False.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from . import ref
+from .flash_attention import flash_attention
+from .matmul import matmul
+from .rmsnorm import rmsnorm
+from .ssd_scan import ssd_scan
+
+ON_TPU = jax.default_backend() == "tpu"
+
+
+def pallas_matmul(x, w, *, act="none", interpret=None):
+    """(…, S, K) @ (K, N): flattens the leading dims for the 2-D kernel and
+    pads block sizes down for small shapes."""
+    interpret = (not ON_TPU) if interpret is None else interpret
+    lead = x.shape[:-1]
+    m = 1
+    for s in lead:
+        m *= s
+    x2 = x.reshape(m, x.shape[-1])
+    k, n = w.shape
+    # MXU-aligned tiles when possible; fall back to full dims for small shapes
+    bm = 128 if m % 128 == 0 else m
+    bn = 128 if n % 128 == 0 else n
+    bk = 128 if k % 128 == 0 else k
+    out = matmul(x2, w, bm=bm, bn=bn, bk=bk, act=act, interpret=interpret)
+    return out.reshape(*lead, n)
+
+
+def pallas_flash(q, k, v, *, causal=True, window=0, q_offset=0, interpret=None):
+    interpret = (not ON_TPU) if interpret is None else interpret
+    return flash_attention(q, k, v, causal=causal, window=window,
+                           q_offset=q_offset, interpret=interpret)
+
+
+def pallas_ssd(xbar, la, Bh, Ch, *, chunk=256, interpret=None):
+    interpret = (not ON_TPU) if interpret is None else interpret
+    return ssd_scan(xbar, la, Bh, Ch, chunk=chunk, interpret=interpret)
+
+
+def pallas_rmsnorm(x, gamma, *, eps=1e-6, zero_centered=False, interpret=None):
+    interpret = (not ON_TPU) if interpret is None else interpret
+    return rmsnorm(x, gamma, eps=eps, zero_centered=zero_centered,
+                   interpret=interpret)
+
+
+def enable_kernels(interpret=None):
+    """Install the Pallas matmul as the local GEMM of every 3-D island."""
+    from ..core import ops3d
+    interp = (not ON_TPU) if interpret is None else interpret
+
+    def local_mm(a, b):
+        return pallas_matmul(a, b, interpret=interp)
+
+    ops3d.set_local_matmul(local_mm)
+
+
+def disable_kernels():
+    from ..core import ops3d
+    ops3d.set_local_matmul(None)

@@ -1,0 +1,68 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose references)."""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+F32 = jnp.float32
+
+
+def matmul_ref(x, w, bias=None, act: str = "none"):
+    out = jnp.dot(x.astype(F32), w.astype(F32))
+    if bias is not None:
+        out = out + bias.astype(F32)
+    fn = {"none": lambda a: a, "gelu": lambda a: jax.nn.gelu(a, approximate=True),
+          "silu": jax.nn.silu, "relu": jax.nn.relu}[act]
+    return fn(out).astype(x.dtype)
+
+
+def attention_ref(q, k, v, *, causal=True, window=0, q_offset=0):
+    """q: (B, Sq, Hq, D); k/v: (B, Sk, Hkv, D)."""
+    b, sq, hq, d = q.shape
+    sk, hkv = k.shape[1], k.shape[2]
+    g = hq // hkv
+    scale = 1.0 / math.sqrt(d)
+    qf = (q.astype(F32) * scale).reshape(b, sq, hkv, g, d)
+    s = jnp.einsum("bqhgd,bkhd->bqhgk", qf, k.astype(F32))
+    qpos = q_offset + jnp.arange(sq)[:, None]
+    kpos = jnp.arange(sk)[None, :]
+    mask = jnp.ones((sq, sk), bool)
+    if causal:
+        mask = mask & (qpos >= kpos)
+    if window:
+        mask = mask & (qpos - kpos < window)
+    s = jnp.where(mask[None, :, None, None, :], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bqhgk,bkhd->bqhgd", p, v.astype(F32))
+    return o.reshape(b, sq, hq, v.shape[-1]).astype(q.dtype)
+
+
+def ssd_ref(xbar, la, Bh, Ch):
+    """Sequential (non-chunked) SSD recurrence.  xbar: (BH, T, dh) dt-scaled;
+    la: (BH, T) log-decay; Bh/Ch: (BH, T, N)."""
+    bh, T, dh = xbar.shape
+    N = Bh.shape[-1]
+
+    def step(h, xs):
+        x_t, la_t, b_t, c_t = xs
+        h = jnp.exp(la_t)[:, None, None] * h + \
+            jnp.einsum("hn,hd->hnd", b_t, x_t)
+        y = jnp.einsum("hn,hnd->hd", c_t, h)
+        return h, y
+
+    h0 = jnp.zeros((bh, N, dh), F32)
+    _, ys = jax.lax.scan(
+        step, h0, (xbar.astype(F32).swapaxes(0, 1), la.astype(F32).swapaxes(0, 1),
+                   Bh.astype(F32).swapaxes(0, 1), Ch.astype(F32).swapaxes(0, 1)))
+    return ys.swapaxes(0, 1).astype(xbar.dtype)
+
+
+def rmsnorm_ref(x, gamma, eps: float = 1e-6, zero_centered: bool = False):
+    xf = x.astype(F32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    g = gamma.astype(F32)
+    if zero_centered:
+        g = g + 1.0
+    return (xf * jax.lax.rsqrt(var + eps) * g).astype(x.dtype)

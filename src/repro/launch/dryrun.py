@@ -1,0 +1,241 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                           + " --xla_force_host_platform_device_count=512")
+# The two lines above MUST run before any jax import: the dry-run (and only
+# the dry-run) builds the production mesh from 512 placeholder host devices.
+
+import argparse          # noqa: E402
+import json              # noqa: E402
+import re                # noqa: E402
+import sys               # noqa: E402
+import time              # noqa: E402
+import traceback         # noqa: E402
+
+import jax               # noqa: E402
+import numpy as np       # noqa: E402
+
+from repro.config import SHAPES, OptimConfig, Family          # noqa: E402
+from repro.configs.registry import ARCH_IDS, LONG_OK, cube_for, get  # noqa: E402
+from repro.core.params import abstract_arrays                 # noqa: E402
+from repro.launch.mesh import (make_framework_layout,         # noqa: E402
+                               make_production_mesh, shape_layout_args)
+from repro.models import transformer                          # noqa: E402
+from repro.optim import opt_state_abstract                    # noqa: E402
+from repro.train.step import (make_decode_step,               # noqa: E402
+                              make_prefill_step, make_train_step)
+
+DTYPE_BYTES = {"f64": 8, "f32": 4, "f16": 2, "bf16": 2, "s64": 8, "s32": 4,
+               "s16": 2, "s8": 1, "u64": 8, "u32": 4, "u16": 2, "u8": 1,
+               "pred": 1, "c64": 8, "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1}
+
+COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n * DTYPE_BYTES.get(dtype, 4)
+
+
+_DEF_RE = re.compile(r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*([a-z0-9]+)\[([0-9,]*)\]")
+_GROUPS_RE = re.compile(r"replica_groups=\{([^}]*)\}")
+_GROUPS2_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+
+
+def collective_stats(hlo: str):
+    """Per-device communication bytes from the post-SPMD HLO, using ring
+    formulas: AG/RS/A2A move size*(n-1)/n, AR moves 2*size*(n-1)/n, CP size."""
+    defs = {}
+    per_op = {c: 0.0 for c in COLLECTIVES}
+    count = {c: 0 for c in COLLECTIVES}
+    for line in hlo.splitlines():
+        m = _DEF_RE.match(line)
+        if m:
+            defs[m.group(1)] = (m.group(2), m.group(3))
+        kind = None
+        for c in COLLECTIVES:
+            if f" {c}(" in line or f" {c}-start(" in line:
+                kind = c
+                break
+        if kind is None or m is None:
+            continue
+        out_bytes = _shape_bytes(m.group(2), m.group(3))
+        # group size from replica_groups
+        n = 2
+        g2 = _GROUPS2_RE.search(line)
+        g1 = _GROUPS_RE.search(line)
+        if g2:
+            n = int(g2.group(2))
+        elif g1:
+            first = g1.group(1).split("}")[0].lstrip("{")
+            n = max(2, len([t for t in first.split(",") if t.strip() != ""]))
+        if kind == "all-gather":
+            moved = out_bytes * (n - 1) / n
+        elif kind == "all-reduce":
+            moved = 2 * out_bytes * (n - 1) / n
+        elif kind == "reduce-scatter":
+            moved = out_bytes * (n - 1)          # input = out*n; moves in*(n-1)/n
+        elif kind == "all-to-all":
+            moved = out_bytes * (n - 1) / n
+        else:  # collective-permute
+            moved = out_bytes
+        per_op[kind] += moved
+        count[kind] += 1
+    total = sum(per_op.values())
+    return {"bytes_per_device": total, "by_kind": per_op, "counts": count}
+
+
+def build_layout(arch: str, shape_name: str, multi_pod: bool, strategy: str):
+    args = shape_layout_args(shape_name, multi_pod)
+    cube = cube_for(arch, 16, strategy)
+    lay = make_framework_layout(multi_pod=multi_pod, strategy=strategy,
+                                cube=cube, **args)
+    # drop batch axes that exceed the global batch
+    shape = SHAPES[shape_name]
+    bax = []
+    prod = 1
+    for a in args["batch_axes"]:
+        if prod * lay.size(a) <= shape.global_batch:
+            bax.append(a)
+            prod *= lay.size(a)
+    import dataclasses
+    return dataclasses.replace(lay, batch_axes=tuple(bax))
+
+
+def lower_one(arch: str, shape_name: str, *, multi_pod: bool,
+              strategy: str = "3d", compile_: bool = True,
+              force_window: int = 0):
+    cfg = get(arch)
+    if force_window and not cfg.window:
+        # sliding-window VARIANT of a full-attention arch: makes long_500k
+        # applicable (the spec's dense-arch carve-out); reported as
+        # "<arch>+swa", never as the assigned config itself.
+        import dataclasses as _dc
+        cfg = _dc.replace(cfg, window=force_window)
+        arch_tag = arch + "+swa"
+    else:
+        arch_tag = arch
+    shape = SHAPES[shape_name]
+    if shape_name == "long_500k" and arch not in LONG_OK and not cfg.window:
+        return {"arch": arch, "shape": shape_name, "multi_pod": multi_pod,
+                "status": "SKIP", "reason": "full quadratic attention; "
+                "sub-quadratic required (DESIGN.md §4)"}
+    layout = build_layout(arch, shape_name, multi_pod, strategy)
+    specs = transformer.input_specs(cfg, layout, shape)
+    params = abstract_arrays(transformer.abstract_params(cfg, layout), layout)
+
+    t0 = time.time()
+    if shape.kind == "train":
+        opt_cfg = OptimConfig(name="adafactor" if arch == "deepseek-v3-671b"
+                              else "adamw")
+        opt = abstract_arrays(
+            opt_state_abstract(transformer.abstract_params(cfg, layout),
+                               layout, opt_cfg), layout)
+        step = make_train_step(cfg, layout, opt_cfg)
+        lowered = jax.jit(step, donate_argnums=(0, 1)).lower(params, opt, *specs)
+    elif shape.kind == "prefill":
+        step = make_prefill_step(cfg, layout)
+        lowered = jax.jit(step).lower(params, *specs)
+    else:
+        step = make_decode_step(cfg, layout)
+        batch, cache = specs
+        lowered = jax.jit(step, donate_argnums=(2,)).lower(params, batch, cache)
+    t_lower = time.time() - t0
+
+    res = {"arch": arch_tag, "shape": shape_name, "multi_pod": multi_pod,
+           "strategy": strategy, "status": "LOWERED",
+           "mesh": dict(layout.mesh.shape), "t_lower_s": round(t_lower, 1)}
+    if not compile_:
+        return res
+
+    t0 = time.time()
+    compiled = lowered.compile()
+    res["t_compile_s"] = round(time.time() - t0, 1)
+    mem = compiled.memory_analysis()
+    res["memory"] = {
+        "argument_gib": mem.argument_size_in_bytes / 2**30,
+        "output_gib": mem.output_size_in_bytes / 2**30,
+        "temp_gib": mem.temp_size_in_bytes / 2**30,
+        "alias_gib": mem.alias_size_in_bytes / 2**30,
+        "peak_gib": (mem.argument_size_in_bytes + mem.output_size_in_bytes
+                     + mem.temp_size_in_bytes - mem.alias_size_in_bytes) / 2**30,
+    }
+    ca = compiled.cost_analysis()
+    if isinstance(ca, list):
+        ca = ca[0]
+    # XLA's cost_analysis counts while bodies once; HloCost multiplies
+    # in-loop dots/collectives/outputs by their trip counts (scan layers).
+    from repro.launch.hlo_cost import HloCost
+    hc = HloCost(compiled.as_text())
+    res["cost"] = {"flops": hc.flops(),
+                   "bytes_accessed": hc.bytes_accessed(),
+                   "xla_flops_raw": float(ca.get("flops", -1)),
+                   "xla_bytes_raw": float(ca.get("bytes accessed", -1))}
+    res["collectives"] = hc.collective_bytes()
+    res["status"] = "OK"
+    return res
+
+
+def main():
+    ap = argparse.ArgumentParser(description="multi-pod dry run")
+    ap.add_argument("--arch", default=None, choices=ARCH_IDS + ["all"])
+    ap.add_argument("--shape", default=None,
+                    choices=list(SHAPES) + ["all"])
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--single-pod", action="store_true")
+    ap.add_argument("--strategy", default="3d", choices=["3d", "2d", "1d"])
+    ap.add_argument("--lower-only", action="store_true")
+    ap.add_argument("--force-window", type=int, default=0,
+                    help="run a sliding-window VARIANT of full-attention archs")
+    ap.add_argument("--out", default=None, help="append JSONL results here")
+    args = ap.parse_args()
+
+    archs = ARCH_IDS if args.arch in (None, "all") else [args.arch]
+    shapes = list(SHAPES) if args.shape in (None, "all") else [args.shape]
+    pods = []
+    if args.single_pod or not args.multi_pod:
+        pods.append(False)
+    if args.multi_pod:
+        pods.append(True)
+
+    # sanity: the prescribed production mesh builds
+    for mp in pods:
+        mesh = make_production_mesh(multi_pod=mp)
+        print(f"production mesh multi_pod={mp}: {dict(mesh.shape)}", flush=True)
+
+    failures = 0
+    for arch in archs:
+        for shape in shapes:
+            for mp in pods:
+                tag = f"{arch} x {shape} x {'2pod' if mp else '1pod'} [{args.strategy}]"
+                try:
+                    res = lower_one(arch, shape, multi_pod=mp,
+                                    strategy=args.strategy,
+                                    compile_=not args.lower_only,
+                                    force_window=args.force_window)
+                except Exception as e:
+                    traceback.print_exc()
+                    res = {"arch": arch, "shape": shape, "multi_pod": mp,
+                           "strategy": args.strategy, "status": "FAIL",
+                           "error": f"{type(e).__name__}: {e}"}
+                    failures += 1
+                line = f"{tag:60s} {res['status']}"
+                if res["status"] == "OK":
+                    line += (f" peak={res['memory']['peak_gib']:.2f}GiB"
+                             f" flops={res['cost']['flops']:.3e}"
+                             f" comm={res['collectives']['bytes_per_device']/2**30:.3f}GiB"
+                             f" (lower {res['t_lower_s']}s compile {res['t_compile_s']}s)")
+                elif res["status"] == "SKIP":
+                    line += f" ({res['reason']})"
+                print(line, flush=True)
+                if args.out:
+                    with open(args.out, "a") as f:
+                        f.write(json.dumps(res) + "\n")
+    sys.exit(1 if failures else 0)
+
+
+if __name__ == "__main__":
+    main()

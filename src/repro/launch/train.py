@@ -1,0 +1,123 @@
+"""Training launcher: ``python -m repro.launch.train --arch tinyllama-1.1b
+--steps 100 --dp 2 --model 4 ...``.
+
+On this CPU container it runs reduced/real configs on host devices; on a TPU
+pod the same entrypoint runs the full mesh (the layout factory is identical).
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import os
+import sys
+import time
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=256)
+    ap.add_argument("--dp", type=int, default=1)
+    ap.add_argument("--model", type=int, default=1)
+    ap.add_argument("--strategy", default="3d", choices=["3d", "2d", "1d"])
+    ap.add_argument("--reduced", action="store_true",
+                    help="use the smoke-test reduced variant")
+    ap.add_argument("--layers", type=int, default=0)
+    ap.add_argument("--d-model", type=int, default=0)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--warmup", type=int, default=20)
+    ap.add_argument("--optimizer", default="adamw")
+    ap.add_argument("--log-every", type=int, default=10)
+    ap.add_argument("--ckpt-dir", default="")
+    ap.add_argument("--ckpt-every", type=int, default=0)
+    ap.add_argument("--data", default="synthetic")
+    ap.add_argument("--data-path", default="")
+    ap.add_argument("--host-devices", type=int, default=0,
+                    help="force N host platform devices (set before jax init)")
+    args = ap.parse_args(argv)
+
+    if args.host_devices:
+        os.environ["XLA_FLAGS"] = (
+            f"--xla_force_host_platform_device_count={args.host_devices}")
+
+    import jax
+    import jax.numpy as jnp
+    from repro.config import OptimConfig, ShapeConfig, reduced
+    from repro.configs.registry import get
+    from repro.core.params import count_params
+    from repro.core.topology import make_layout
+    from repro.data.pipeline import DataConfig, TokenStream
+    from repro.models import transformer
+    from repro.optim import make_optimizer
+    from repro.train.step import make_train_step
+    from repro.checkpoint import store
+
+    cfg = get(args.arch)
+    if args.reduced:
+        cfg = reduced(cfg)
+    changes = {}
+    if args.layers:
+        changes["n_layers"] = args.layers
+    if args.d_model:
+        changes["d_model"] = args.d_model
+    if changes:
+        cfg = dataclasses.replace(cfg, **changes)
+
+    layout = make_layout(n_pod=1, n_dp=args.dp, n_model=args.model,
+                         strategy=args.strategy)
+    shape = ShapeConfig("cli", args.seq, args.batch, "train")
+    opt_cfg = OptimConfig(name=args.optimizer, lr=args.lr, warmup=args.warmup,
+                          total_steps=args.steps)
+
+    print(f"arch={cfg.arch} layers={cfg.n_layers} d={cfg.d_model} "
+          f"mesh={dict(layout.mesh.shape)} strategy={args.strategy}")
+    params = transformer.init(cfg, layout, jax.random.key(0))
+    n_params = sum(x.size for x in jax.tree.leaves(params))
+    print(f"params: {n_params/1e6:.1f}M")
+
+    from repro.optim.optimizers import opt_state_abstract
+    from repro.core.params import init_params
+    opt_state = init_params(
+        opt_state_abstract(transformer.abstract_params(cfg, layout), layout,
+                           opt_cfg), jax.random.key(1))
+    step_fn = jax.jit(make_train_step(cfg, layout, opt_cfg),
+                      donate_argnums=(0, 1))
+
+    start = 0
+    if args.ckpt_dir:
+        last = store.latest_step(args.ckpt_dir)
+        if last >= 0:
+            print(f"restoring step {last} from {args.ckpt_dir}")
+            params, opt_state, extra = store.restore(
+                args.ckpt_dir, last, params, layout, opt_state)
+            start = last
+
+    data = TokenStream(cfg, layout, shape,
+                       DataConfig(kind=args.data, path=args.data_path))
+    it = iter(data)
+    t0 = time.time()
+    losses = []
+    for step in range(start, args.steps):
+        batch = next(it)
+        params, opt_state, metrics = step_fn(params, opt_state, batch)
+        if (step + 1) % args.log_every == 0 or step == start:
+            loss = float(metrics["loss"])
+            losses.append(loss)
+            dt = (time.time() - t0) / max(step - start + 1, 1)
+            print(f"step {step+1:5d} loss={loss:8.4f} "
+                  f"xent={float(metrics['xent']):8.4f} "
+                  f"lr={float(metrics['lr']):.2e} "
+                  f"gnorm={float(metrics['gnorm']):7.3f} "
+                  f"{dt:6.2f}s/step", flush=True)
+        if args.ckpt_dir and args.ckpt_every and (step + 1) % args.ckpt_every == 0:
+            d = store.save(args.ckpt_dir, step + 1, params, opt_state)
+            print(f"saved {d}")
+    print(f"done: first loss {losses[0]:.4f} -> last {losses[-1]:.4f}")
+    return losses
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,232 @@
+"""DeepSeek-V3 Multi-head Latent Attention (MLA), 3-D parallel.
+
+The low-rank structure maps onto the cube as two chained linears
+(DESIGN.md §4): the *down* projections use ``matmul3d_noswap`` (contraction
+psum over out_ax, tiny replicated latent output), the *up* projections use
+``matmul3d_repc`` (replicated contraction, zero-comm scatter) — together one
+direction exchange, so MLA + output projection keeps the block's swap count
+even, exactly like a standard attention block.
+
+Decode uses the compressed KV cache with absorbed up-projection weights
+(score/value computed in the 512-dim latent space), which is what makes the
+decode_32k x batch-128 cache fit.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.sharding import PartitionSpec as P
+
+from ..config import ModelConfig
+from ..core import ops3d
+from ..core.linear3d import plinear, rmsnorm, weight_param, wsc
+from ..core.params import Param
+from ..core.topology import Dirs, Layout
+from .blocks import _gather_axes, _head_axes, apply_rope, attention
+
+F32 = jnp.float32
+
+
+def _m(cfg: ModelConfig):
+    m = cfg.mla
+    return m, cfg.n_heads, m.qk_nope_dim, m.qk_rope_dim, m.v_head_dim
+
+
+def mla_params(layout: Layout, cfg: ModelConfig, dirs: Dirs):
+    m, nh, dn, dr, dv = _m(cfg)
+    d = cfg.d_model
+    if layout.strategy == "3d":
+        down = lambda f: Param((d, f), P(dirs.out_ax, None))
+        up_cols = (dirs.in_ax if layout.inference_opt
+                   else (dirs.in_ax, "x"))
+        up = lambda r, f: Param((r, f), P(None, up_cols))
+    elif layout.strategy == "2d":
+        down = lambda f: Param((d, f), P("z", None))
+        up = lambda r, f: Param((r, f), P(None, "z"))
+    else:
+        down = lambda f: Param((d, f), P(None, None))
+        up = lambda r, f: Param((r, f), P(None, "z"))
+    return {
+        "w_dq": down(m.q_lora_rank),
+        "q_ln": Param((m.q_lora_rank,), P(None), init="ones"),
+        "w_uq": up(m.q_lora_rank, nh * (dn + dr)),
+        "w_dkv": down(m.kv_lora_rank + dr),
+        "kv_ln": Param((m.kv_lora_rank,), P(None), init="ones"),
+        "w_ukv": up(m.kv_lora_rank, nh * (dn + dv)),
+        "w_o": weight_param(layout, dirs.swap(), nh * dv, d, kind="second"),
+    }
+
+
+def _down(layout: Layout, dirs: Dirs, x, w, decode: bool):
+    if layout.strategy == "3d":
+        if decode:
+            return ops3d.matmul3d_decode(layout, dirs.in_ax, dirs.out_ax, x, w,
+                                         shard_f=False)
+        return ops3d.matmul3d_noswap(layout, dirs.in_ax, dirs.out_ax, x, w)
+    # baselines: GSPMD (XLA inserts the contraction all-reduce)
+    return jnp.einsum("bsh,hf->bsf", x, w,
+                      preferred_element_type=F32).astype(x.dtype)
+
+
+def _up(layout: Layout, dirs: Dirs, x, w, decode: bool):
+    if layout.strategy == "3d":
+        if decode:
+            return ops3d.matmul3d_repc_decode(layout, dirs.in_ax, dirs.out_ax, x, w)
+        return ops3d.matmul3d_repc(layout, dirs.in_ax, dirs.out_ax, x, w)
+    return jnp.einsum("bsr,rf->bsf", x, w,
+                      preferred_element_type=F32).astype(x.dtype)
+
+
+def mla_apply(layout: Layout, cfg: ModelConfig, dirs: Dirs, x, p, positions,
+              *, decode=False, cache=None):
+    """x in block entry layout; returns (out, new_cache)."""
+    m, nh, dn, dr, dv = _m(cfg)
+    B, S = x.shape[0], x.shape[1]
+    hx = layout.size(_head_axes(layout, dirs)[1])
+    nh_loc = nh // hx
+
+    # ---- q path ----
+    qc = _down(layout, dirs, x, p["w_dq"], decode)            # (B,S,q_lora) repl.
+    qc = rmsnorm(qc, p["q_ln"])
+    q = _up(layout, dirs, qc, p["w_uq"], decode)              # (B,S,nh(dn+dr)/si)
+    q = q.reshape(B, S, -1, dn + dr)
+    q_nope, q_rope = q[..., :dn], q[..., dn:]
+    q_rope = apply_rope(q_rope, positions, cfg.rope_base)
+
+    # ---- kv path ----
+    ckr = _down(layout, dirs, x, p["w_dkv"], decode)          # (B,S,kv_lora+dr)
+    c_kv, k_rope = ckr[..., :m.kv_lora_rank], ckr[..., m.kv_lora_rank:]
+    c_kv = rmsnorm(c_kv, p["kv_ln"])
+    k_rope = apply_rope(k_rope[:, :, None, :], positions, cfg.rope_base)[:, :, 0]
+
+    if decode:
+        out, new_cache = _mla_decode(layout, cfg, dirs, q_nope, q_rope, c_kv,
+                                     k_rope, p["w_ukv"], cache,
+                                     positions[:, 0] if positions.ndim > 1 else positions)
+        out = out.reshape(B, S, -1)
+    else:
+        kv = _up(layout, dirs, c_kv, p["w_ukv"], decode)      # (B,S,nh(dn+dv)/si)
+        kv = kv.reshape(B, S, -1, dn + dv)
+        k_nope, v = kv[..., :dn], kv[..., dn:]
+        # k_rope: noswap output has seq split over in_ax; attention layout
+        # wants out_ax — reshard (tiny: dr floats per token), then broadcast
+        seq_ax = _head_axes(layout, dirs)[0]
+        if layout.strategy == "3d":
+            kr_spec = P(layout.batch_spec(),
+                        ops3d._seq_spec(layout, seq_ax), None)
+            k_rope = wsc(k_rope, layout.sharding(kr_spec))
+        k = jnp.concatenate(
+            [k_nope, jnp.broadcast_to(k_rope[:, :, None, :],
+                                      (*k_nope.shape[:3], dr))], axis=-1)
+        q_full = jnp.concatenate([q_nope, q_rope], axis=-1)
+        # materialized path: n_kv == n_heads (every head has its own k/v)
+        out = attention(layout, _with_full_kv(cfg), dirs, q_full, k, v,
+                        causal=True)
+        out = out.reshape(B, S, -1)
+        new_cache = None
+
+    y, _ = plinear(layout, dirs.swap(), out, p["w_o"], kind="second",
+                   decode=decode)
+    return y, new_cache
+
+
+def _with_full_kv(cfg: ModelConfig):
+    import dataclasses
+    return dataclasses.replace(cfg, n_kv=cfg.n_heads)
+
+
+def mla_cache_init(layout: Layout, cfg: ModelConfig, dirs: Dirs, batch: int,
+                   length: int):
+    m = cfg.mla
+    seq_ax, _ = _head_axes(layout, dirs)
+    gax = _gather_axes(layout, seq_ax)
+    bs = layout.batch_spec()
+    return {
+        "c_kv": Param((batch, length, m.kv_lora_rank), P(bs, gax or None, None),
+                      init="zeros"),
+        "k_rope": Param((batch, length, m.qk_rope_dim), P(bs, gax or None, None),
+                        init="zeros"),
+        "pos": Param((batch, length), P(bs, gax or None), dtype=jnp.int32,
+                     init="zeros"),
+    }
+
+
+def _mla_decode(layout: Layout, cfg: ModelConfig, dirs: Dirs, q_nope, q_rope,
+                ckv_new, kr_new, w_ukv, cache, pos):
+    """Absorbed-weight decode over the compressed cache."""
+    m, nh, dn, dr, dv = _m(cfg)
+    seq_ax, head_ax = _head_axes(layout, dirs)
+    gax = _gather_axes(layout, seq_ax)
+    nshards = math.prod(layout.size(a) for a in gax) if gax else 1
+    hx = layout.size(head_ax)
+    nh_loc = nh // hx
+    scale = 1.0 / math.sqrt(dn + dr)
+    bs = layout.batch_spec()
+
+    qspec = P(bs, None, head_ax, None)
+    lat_spec = P(bs, None, None)
+    cspec = P(bs, gax or None, None)
+    pspec = P(bs, gax or None)
+    if layout.strategy == "3d":
+        w_spec = P(None, head_ax if layout.inference_opt
+                   else (head_ax, "x"))
+    elif layout.strategy == "2d":
+        w_spec = P(None, "z")
+    else:
+        w_spec = P(None, "z")
+
+    def body(qn, qr, ckv_new, kr_new, cc, ckr, cpos, pos, w_ukv):
+        b, l_loc = cpos.shape
+        shard = 0
+        for a in gax:
+            shard = shard * layout.size(a) + lax.axis_index(a)
+        L = l_loc * nshards
+        slot = pos % L
+        local = slot - shard * l_loc
+        own = (local >= 0) & (local < l_loc)
+        li = jnp.clip(local, 0, l_loc - 1)
+        rows = jnp.arange(b)
+        cc = cc.at[rows, li].set(jnp.where(own[:, None], ckv_new[:, 0], cc[rows, li]))
+        ckr = ckr.at[rows, li].set(jnp.where(own[:, None], kr_new[:, 0], ckr[rows, li]))
+        cpos = cpos.at[rows, li].set(jnp.where(own, pos, cpos[rows, li]))
+
+        if layout.strategy == "3d" and layout.size("x") > 1 \
+                and not layout.inference_opt:
+            w_ukv = lax.all_gather(w_ukv, "x", axis=1, tiled=True)
+        wk = w_ukv.reshape(m.kv_lora_rank, -1, dn + dv)
+        w_uk, w_uv = wk[..., :dn], wk[..., dn:]               # (R, nh_loc, dn/dv)
+
+        qc = jnp.einsum("bhd,rhd->bhr", qn[:, 0].astype(F32),
+                        w_uk.astype(F32))                     # (b, nh_loc, R)
+        s = jnp.einsum("bhr,blr->bhl", qc, cc.astype(F32)) + \
+            jnp.einsum("bhd,bld->bhl", qr[:, 0].astype(F32), ckr.astype(F32))
+        s = s * scale
+        valid = (cpos >= 0) & (cpos <= pos[:, None])
+        # slots never written have pos==0 from init; track via slot index vs pos
+        written = jnp.arange(l_loc)[None, :] + shard * l_loc <= pos[:, None]
+        s = jnp.where((valid & written)[:, None, :], s, -1e30)
+        m_loc = jnp.max(s, axis=-1)
+        mx = lax.pmax(m_loc, gax) if gax else m_loc
+        pr = jnp.exp(s - mx[..., None])
+        l_sum = jnp.sum(pr, axis=-1)
+        oc = jnp.einsum("bhl,blr->bhr", pr, cc.astype(F32))
+        if gax:
+            l_sum = lax.psum(l_sum, gax)
+            oc = lax.psum(oc, gax)
+        oc = oc / jnp.maximum(l_sum, 1e-30)[..., None]
+        o = jnp.einsum("bhr,rhd->bhd", oc, w_uv.astype(F32))  # (b, nh_loc, dv)
+        return o[:, None].astype(qn.dtype), cc, ckr, cpos
+
+    out, cc, ckr, cpos = jax.shard_map(
+        body, mesh=layout.mesh,
+        in_specs=(qspec, qspec, lat_spec, lat_spec, cspec, cspec, pspec,
+                  P(bs), w_spec),
+        out_specs=(qspec, cspec, cspec, pspec),
+        check_vma=False)(q_nope, q_rope, ckv_new, kr_new,
+                         cache["c_kv"], cache["k_rope"], cache["pos"], pos,
+                         w_ukv)
+    return out, {"c_kv": cc, "k_rope": ckr, "pos": cpos}

@@ -1,0 +1,595 @@
+"""Top-level model assembly: any assigned architecture -> init / train-loss /
+prefill / decode functions, all 3-D parallel (or 1-D/2-D baseline).
+
+Layer stacks run under ``lax.scan`` with layer-stacked parameter trees, so
+compile time and HLO size are O(1) in depth.  Heterogeneous stacks (hybrid
+zamba2, xlstm interleave, MoE first-k-dense) are split into homogeneous
+segments statically.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from ..config import Family, ModelConfig, ShapeConfig
+from ..core.linear3d import (act_spec, act_spec_decode, cross_entropy,
+                             embed_lookup, embed_param, logits_spec,
+                             plinear, weight_param, wsc)
+from ..core.params import Param, abstract_arrays, init_params, stack_tree
+from ..core.topology import Dirs, Layout
+from . import blocks as B
+from . import encdec, mamba2, mla, moe as moe_mod, xlstm
+
+F32 = jnp.float32
+
+
+def entry_dirs() -> Dirs:
+    return Dirs("y", "z")
+
+
+# ---------------------------------------------------------------------------
+# Stage plans for heterogeneous stacks
+# ---------------------------------------------------------------------------
+def hybrid_plan(cfg: ModelConfig):
+    """[(n_mamba, has_shared_attn_after)] segments."""
+    every = cfg.ssm.attn_every or (cfg.n_layers + 1)
+    segs = []
+    done = 0
+    while done < cfg.n_layers:
+        n = min(every, cfg.n_layers - done)
+        done += n
+        segs.append((n, done < cfg.n_layers + 1 and n == every))
+    return segs
+
+
+def xlstm_plan(cfg: ModelConfig):
+    """[(kind, count)] segments, kind in {'m', 's'}."""
+    every = cfg.ssm.slstm_every
+    if not every:
+        return [("m", cfg.n_layers)]
+    segs = []
+    done = 0
+    while done < cfg.n_layers:
+        n = min(every - 1, cfg.n_layers - done)
+        if n:
+            segs.append(("m", n))
+            done += n
+        if done < cfg.n_layers:
+            segs.append(("s", 1))
+            done += 1
+    return segs
+
+
+def moe_layer_counts(cfg: ModelConfig):
+    fk = cfg.moe.first_k_dense if cfg.moe else 0
+    return fk, cfg.n_layers - fk
+
+
+# ---------------------------------------------------------------------------
+# Parameters
+# ---------------------------------------------------------------------------
+def moe_block_params(layout: Layout, cfg: ModelConfig, dirs: Dirs):
+    p = {"ln1": B.make_norm_params(layout, cfg, dirs),
+         "ln2": B.make_norm_params(layout, cfg, dirs),
+         "moe": moe_mod.moe_params(layout, cfg, dirs)}
+    if cfg.mla is not None:
+        p["mla"] = mla.mla_params(layout, cfg, dirs)
+    else:
+        p["attn"] = B.attn_params(layout, cfg, dirs)
+    return p
+
+
+def dense_block_params_for(layout, cfg, dirs, d_ff=None):
+    if cfg.mla is not None:
+        return {"ln1": B.make_norm_params(layout, cfg, dirs),
+                "ln2": B.make_norm_params(layout, cfg, dirs),
+                "mla": mla.mla_params(layout, cfg, dirs),
+                "mlp": B.mlp_params(layout, cfg, dirs, d_ff=d_ff)}
+    return B.dense_block_params(layout, cfg, dirs, d_ff=d_ff)
+
+
+def abstract_params(cfg: ModelConfig, layout: Layout):
+    dirs = entry_dirs()
+    d = cfg.d_model
+    p: Dict[str, Any] = {"embed": embed_param(layout, dirs, cfg.vocab, d)}
+
+    if cfg.family in (Family.DENSE, Family.VLM):
+        p["blocks"] = stack_tree(dense_block_params_for(layout, cfg, dirs),
+                                 cfg.n_layers)
+    elif cfg.family == Family.MOE:
+        fk, nmoe = moe_layer_counts(cfg)
+        if fk:
+            p["dense_blocks"] = stack_tree(
+                dense_block_params_for(layout, cfg, dirs,
+                                       d_ff=cfg.moe.dense_ff or cfg.d_ff), fk)
+        p["moe_blocks"] = stack_tree(moe_block_params(layout, cfg, dirs), nmoe)
+    elif cfg.family == Family.HYBRID:
+        p["mamba"] = stack_tree(mamba2.mamba_params(layout, cfg, dirs),
+                                cfg.n_layers)
+        if cfg.ssm.attn_every:
+            p["shared_attn"] = B.dense_block_params(layout, cfg, dirs)
+    elif cfg.family == Family.SSM:
+        n_m = sum(n for k, n in xlstm_plan(cfg) if k == "m")
+        n_s = cfg.n_layers - n_m
+        p["mlstm"] = stack_tree(xlstm.mlstm_params(layout, cfg, dirs), n_m)
+        if n_s:
+            p["slstm"] = stack_tree(xlstm.slstm_params(layout, cfg, dirs), n_s)
+    elif cfg.family == Family.AUDIO:
+        p["encoder"] = encdec.encoder_params(layout, cfg, dirs)
+        p["dec_blocks"] = stack_tree(encdec.decoder_block_params(layout, cfg, dirs),
+                                     cfg.n_layers)
+    else:
+        raise ValueError(cfg.family)
+
+    p["ln_f"] = B.make_norm_params(layout, cfg, dirs)
+    p["head"] = weight_param(layout, dirs, d, cfg.vocab, kind="first",
+                             init_scale=1.0)
+    if cfg.mtp:
+        p["mtp"] = {
+            "ln_h": B.make_norm_params(layout, cfg, dirs),
+            "ln_e": B.make_norm_params(layout, cfg, dirs),
+            "proj": Param((2 * d, d), P(dirs.out_ax, None)),  # noswap proj
+            "block": dense_block_params_for(layout, cfg, dirs,
+                                            d_ff=(cfg.moe.dense_ff if cfg.moe
+                                                  else cfg.d_ff)),
+        }
+    return p
+
+
+def init(cfg: ModelConfig, layout: Layout, key):
+    return init_params(abstract_params(cfg, layout), key)
+
+
+def param_counts(cfg: ModelConfig):
+    """(total, active) parameter counts from the real parameter tree
+    (MoE: only top-k routed experts count as active)."""
+    from ..core.params import count_params, is_param
+    from ..core.topology import single_device_layout
+    tree = abstract_params(cfg, single_device_layout())
+    total = count_params(tree)
+    active = total
+    if cfg.moe:
+        blocks = tree.get("moe_blocks", {})
+        routed = sum(p.size for k in ("w1", "w2", "w3")
+                     for p in jax.tree.leaves(
+                         blocks.get("moe", {}).get(k), is_leaf=is_param)
+                     if is_param(p))
+        active = total - int(routed * (cfg.moe.n_experts - cfg.moe.top_k)
+                             / cfg.moe.n_experts)
+    return total, active
+
+
+# ---------------------------------------------------------------------------
+# Block application (single layer, dispatching on family/kind)
+# ---------------------------------------------------------------------------
+def apply_moe_block(layout, cfg, dirs, x, p, positions, *, decode=False,
+                    cache=None, return_kv=False):
+    h = B.apply_norm(cfg, x, p["ln1"])
+    if "mla" in p:
+        a, new_cache = mla.mla_apply(layout, cfg, dirs, h, p["mla"], positions,
+                                     decode=decode, cache=cache)
+    else:
+        a, new_cache = B.attn_apply(layout, cfg, dirs, h, p["attn"], positions,
+                                    window=cfg.window, decode=decode,
+                                    cache=cache, return_kv=return_kv)
+    x = x + a
+    h = B.apply_norm(cfg, x, p["ln2"])
+    y, aux = moe_mod.moe_apply(layout, cfg, dirs, h, p["moe"], decode=decode)
+    return x + y, new_cache, aux
+
+
+def apply_dense_block(layout, cfg, dirs, x, p, positions, *, decode=False,
+                      cache=None, causal=True, return_kv=False):
+    if "mla" in p:
+        h = B.apply_norm(cfg, x, p["ln1"])
+        a, new_cache = mla.mla_apply(layout, cfg, dirs, h, p["mla"], positions,
+                                     decode=decode, cache=cache)
+        x = x + a
+        h = B.apply_norm(cfg, x, p["ln2"])
+        x = x + B.mlp_apply(layout, cfg, dirs, h, p["mlp"], decode=decode)
+        return x, new_cache
+    return B.dense_block_apply(layout, cfg, dirs, x, p, positions,
+                               decode=decode, cache=cache, causal=causal,
+                               return_kv=return_kv)
+
+
+# ---------------------------------------------------------------------------
+# Stack runners (scan over stacked params; optional cache thread-through)
+# ---------------------------------------------------------------------------
+def _scan_stack(block_fn, x, stacked_params, caches=None, remat=False,
+                with_aux=False):
+    """block_fn(x, layer_params, layer_cache) -> (x, new_cache, aux?)."""
+    def f(carry, xs):
+        x, aux_acc = carry
+        bp, cache = xs if caches is not None else (xs, None)
+        if with_aux:
+            x, new_cache, aux = block_fn(x, bp, cache)
+            aux_acc = aux_acc + aux
+        else:
+            x, new_cache = block_fn(x, bp, cache)
+        out = new_cache if caches is not None else None
+        return (x, aux_acc), out
+
+    if remat:
+        f = jax.checkpoint(f)
+    xs = (stacked_params, caches) if caches is not None else stacked_params
+    (x, aux), new_caches = jax.lax.scan(f, (x, jnp.zeros((), F32)), xs)
+    return x, new_caches, aux
+
+
+def _tree_slice(tree, s, e):
+    return jax.tree.map(lambda a: a[s:e], tree)
+
+
+def _tree_concat(trees):
+    return jax.tree.map(lambda *xs: jnp.concatenate(xs, axis=0), *trees)
+
+
+# ---------------------------------------------------------------------------
+# Forward
+# ---------------------------------------------------------------------------
+def _embed(cfg, layout, dirs, params, batch, decode=False):
+    tokens = batch["token" if decode else "tokens"]
+    x = embed_lookup(layout, dirs, tokens, params["embed"], decode=decode)
+    if cfg.emb_scale_sqrt_d:
+        x = x * math.sqrt(cfg.d_model)
+    return x
+
+
+def forward(cfg: ModelConfig, layout: Layout, params, batch, *, mode: str,
+            cache=None):
+    """mode: 'train' -> (loss, metrics); 'prefill' -> (last_logits, cache);
+    'decode' -> (logits, cache)."""
+    dirs = entry_dirs()
+    decode = mode == "decode"
+    remat = cfg.remat and mode == "train"
+
+    # ---- input embedding (+ modality frontends) ----
+    if cfg.family == Family.AUDIO and not decode:
+        enc = encdec.encoder_apply(layout, cfg, dirs, batch["frames"],
+                                   params["encoder"], remat=remat)
+    x = _embed(cfg, layout, dirs, params, batch, decode=decode)
+    if cfg.family == Family.VLM and not decode:
+        vis = batch["patch_embeds"].astype(x.dtype)
+        x = jnp.concatenate([vis, x], axis=1)
+        x = wsc(x, layout.sharding(act_spec(layout, dirs)))
+
+    S = x.shape[1]
+    if decode:
+        positions = batch["pos"][:, None]                      # (B, 1)
+    else:
+        positions = jnp.broadcast_to(jnp.arange(S), (x.shape[0], S))
+
+    aux = jnp.zeros((), F32)
+    new_cache: Dict[str, Any] = {}
+
+    # ---- body ----
+    collect = mode == "prefill" and cfg.mla is None
+    if cfg.family in (Family.DENSE, Family.VLM):
+        fn = lambda x, bp, c: apply_dense_block(
+            layout, cfg, dirs, x, bp, positions, decode=decode, cache=c,
+            return_kv=collect)
+        x, nc, _ = _scan_stack(fn, x, params["blocks"],
+                               caches=cache["layers"] if decode else None,
+                               remat=remat)
+        if decode or collect:
+            new_cache["layers"] = nc
+
+    elif cfg.family == Family.MOE:
+        fk, nmoe = moe_layer_counts(cfg)
+        if fk:
+            fn = lambda x, bp, c: apply_dense_block(
+                layout, cfg, dirs, x, bp, positions, decode=decode, cache=c)
+            x, nc, _ = _scan_stack(fn, x, params["dense_blocks"],
+                                   caches=cache["dense"] if decode else None,
+                                   remat=remat)
+            if decode:
+                new_cache["dense"] = nc
+        fn = lambda x, bp, c: apply_moe_block(
+            layout, cfg, dirs, x, bp, positions, decode=decode, cache=c,
+            return_kv=collect)
+        x, nc, aux = _scan_stack(fn, x, params["moe_blocks"],
+                                 caches=cache["moe"] if decode else None,
+                                 remat=remat, with_aux=True)
+        if decode or collect:
+            new_cache["moe"] = nc
+
+    elif cfg.family == Family.HYBRID:
+        segs = hybrid_plan(cfg)
+        m_done = s_done = 0
+        m_caches, s_caches = [], []
+        for n, has_attn in segs:
+            mp = _tree_slice(params["mamba"], m_done, m_done + n)
+            mc = _tree_slice(cache["mamba"], m_done, m_done + n) if decode else None
+            fn = lambda x, bp, c: mamba2.mamba_apply(
+                layout, cfg, dirs, x, bp, positions, decode=decode, cache=c)
+            x, nc, _ = _scan_stack(fn, x, mp, caches=mc, remat=remat)
+            if decode:
+                m_caches.append(nc)
+            m_done += n
+            if has_attn and "shared_attn" in params:
+                sc = (jax.tree.map(lambda a: a[s_done], cache["shared"])
+                      if decode else None)
+                shared_fn = functools.partial(
+                    B.dense_block_apply, layout, cfg, dirs,
+                    positions=positions, decode=decode, cache=sc,
+                    window=cfg.window)
+                blk = (lambda xx, pp: shared_fn(xx, pp))
+                if remat:
+                    blk = jax.checkpoint(blk)
+                x, nkv = blk(x, params["shared_attn"])
+                if decode:
+                    s_caches.append(jax.tree.map(lambda a: a[None], nkv))
+                s_done += 1
+        if decode:
+            new_cache["mamba"] = _tree_concat(m_caches)
+            if s_caches:
+                new_cache["shared"] = _tree_concat(s_caches)
+
+    elif cfg.family == Family.SSM:
+        m_done = s_done = 0
+        m_caches, s_caches = [], []
+        for kind, n in xlstm_plan(cfg):
+            if kind == "m":
+                mp = _tree_slice(params["mlstm"], m_done, m_done + n)
+                mc = _tree_slice(cache["mlstm"], m_done, m_done + n) if decode else None
+                fn = lambda x, bp, c: xlstm.mlstm_apply(
+                    layout, cfg, dirs, x, bp, positions, decode=decode, cache=c)
+                x, nc, _ = _scan_stack(fn, x, mp, caches=mc, remat=remat)
+                if decode:
+                    m_caches.append(nc)
+                m_done += n
+            else:
+                sp = _tree_slice(params["slstm"], s_done, s_done + n)
+                sc = _tree_slice(cache["slstm"], s_done, s_done + n) if decode else None
+                fn = lambda x, bp, c: xlstm.slstm_apply(
+                    layout, cfg, dirs, x, bp, positions, decode=decode, cache=c)
+                x, nc, _ = _scan_stack(fn, x, sp, caches=sc, remat=remat)
+                if decode:
+                    s_caches.append(nc)
+                s_done += n
+        if decode:
+            new_cache["mlstm"] = _tree_concat(m_caches)
+            if s_caches:
+                new_cache["slstm"] = _tree_concat(s_caches)
+
+    elif cfg.family == Family.AUDIO:
+        if decode:
+            def fn(x, bp_and_kv, c):
+                bp, (ck, cv) = bp_and_kv
+                return encdec.decoder_block_apply(
+                    layout, cfg, dirs, x, bp, positions, (ck, cv),
+                    decode=True, cache=c)
+            x, nc, _ = _scan_stack(
+                fn, x, (params["dec_blocks"],
+                        (cache["cross"]["k"], cache["cross"]["v"])),
+                caches=cache["layers"], remat=False)
+            new_cache["layers"] = nc
+            new_cache["cross"] = cache["cross"]
+        else:
+            def fn(x, bp, c):
+                return encdec.decoder_block_apply(
+                    layout, cfg, dirs, x, bp, positions, enc, decode=False)
+            x, _, _ = _scan_stack(fn, x, params["dec_blocks"], remat=remat)
+
+    # ---- head ----
+    x = B.apply_norm(cfg, x, params["ln_f"])
+
+    if mode == "decode":
+        logits, _ = plinear(layout, dirs, x, params["head"], kind="first",
+                            decode=True)
+        return logits[:, 0], new_cache
+
+    if mode == "prefill":
+        # last-position logits only (cheap head); new_cache carries the
+        # per-layer rope'd (k, v) stack for the serving hand-off
+        last = x[:, -1:]
+        last = wsc(last, layout.sharding(act_spec_decode(layout, dirs)))
+        logits, _ = plinear(layout, dirs, last, params["head"], kind="first",
+                            decode=True)
+        return logits[:, 0], new_cache
+
+    labels = batch["labels"]
+    if cfg.family == Family.VLM:
+        pad = jnp.zeros((x.shape[0], batch["patch_embeds"].shape[1]),
+                        labels.dtype)
+        labels = jnp.concatenate([pad, labels], axis=1)
+        mask = jnp.concatenate([jnp.zeros_like(pad, F32),
+                                jnp.ones(batch["labels"].shape, F32)], axis=1)
+    else:
+        mask = (labels >= 0).astype(F32)
+    loss = chunked_head_loss(cfg, layout, dirs, x, jnp.maximum(labels, 0),
+                             mask, params["head"])
+    metrics = {"xent": loss, "aux": aux}
+    loss = loss + aux
+
+    if cfg.mtp:
+        mtp_loss = _mtp_loss(cfg, layout, dirs, params, x, batch, positions)
+        loss = loss + 0.1 * mtp_loss
+        metrics["mtp"] = mtp_loss
+    return loss, metrics
+
+
+def _prefill_cache_placeholder():
+    return {}
+
+
+def head_loss_chunks(cfg: ModelConfig, layout: Layout, S: int) -> int:
+    # Seq-chunking factor for the LM head + loss: bounds the materialized
+    # (tokens, V) logits (and their gathered cotangents in the Algorithm-2
+    # backward islands) to roughly a 32k-vocab's worth (EXPERIMENTS.md §Perf).
+    k = min(8, max(1, cfg.vocab // 32000, S // 1024))
+    div = layout.size("y") * layout.size("z") * \
+        math.prod(layout.size(a) for a in layout.seq_axes)
+    while k > 1 and (S % k or (S // k) % div):
+        k -= 1
+    return k
+
+
+def chunked_head_loss(cfg: ModelConfig, layout: Layout, dirs: Dirs, x,
+                      labels, mask, w_head):
+    # LM head + vocab-parallel cross entropy, chunked over the sequence under
+    # a lax.scan (strictly sequential in fwd AND bwd) and checkpointed per
+    # chunk: neither the logits nor their cotangents are ever live for more
+    # than one chunk.  Tokens are interleaved position%K -> chunk so each
+    # chunk keeps the balanced sequence sharding.
+    B_, S = labels.shape
+    K = head_loss_chunks(cfg, layout, S)
+
+    @jax.checkpoint
+    def chunk(x_c, lab_c, mask_c, w):
+        logits, _ = plinear(layout, dirs, x_c, w, kind="first")
+        lf = logits.astype(F32)
+        m = jax.lax.stop_gradient(jnp.max(lf, axis=-1, keepdims=True))
+        lse = jnp.log(jnp.sum(jnp.exp(lf - m), axis=-1)) + m[..., 0]
+        picked = jnp.take_along_axis(lf, lab_c[..., None], axis=-1)[..., 0]
+        nll = (lse - picked) * mask_c
+        return jnp.sum(nll), jnp.sum(mask_c)
+
+    if K == 1:
+        tot, cnt = chunk(x, labels, mask, w_head)
+        return tot / jnp.maximum(cnt, 1)
+    c = S // K
+    xs = (x.reshape(B_, c, K, -1).transpose(2, 0, 1, 3),
+          labels.reshape(B_, c, K).transpose(2, 0, 1),
+          mask.reshape(B_, c, K).transpose(2, 0, 1))
+
+    def body(acc, inp):
+        x_c, lab_c, mask_c = inp
+        t, n = chunk(x_c, lab_c, mask_c, w_head)
+        return (acc[0] + t, acc[1] + n), None
+
+    (tot, cnt), _ = jax.lax.scan(body, (jnp.zeros((), F32), jnp.zeros((), F32)), xs)
+    return tot / jnp.maximum(cnt, 1)
+
+
+def _mtp_loss(cfg, layout, dirs, params, h, batch, positions):
+    """DeepSeek multi-token prediction: predict t+2 from (h_t, emb_{t+1})."""
+    from ..core import ops3d
+    p = params["mtp"]
+    tokens, labels = batch["tokens"], batch["labels"]
+    nxt = jnp.concatenate([tokens[:, 1:], tokens[:, -1:]], axis=1)
+    e = embed_lookup(layout, dirs, nxt, params["embed"])
+    cat = jnp.concatenate([B.apply_norm(cfg, h, p["ln_h"]),
+                           B.apply_norm(cfg, e, p["ln_e"])], axis=-1)
+    if layout.strategy == "3d":
+        z = ops3d.matmul3d_noswap(layout, dirs.in_ax, dirs.out_ax, cat, p["proj"])
+        z = wsc(z, layout.sharding(act_spec(layout, dirs)))   # re-split hidden
+    else:
+        z = jnp.einsum("bsh,hf->bsf", cat, p["proj"],
+                       preferred_element_type=F32).astype(cat.dtype)
+    z, _ = apply_dense_block(layout, cfg, dirs, z, p["block"], positions)
+    z = B.apply_norm(cfg, z, params["ln_f"])
+    lab2 = jnp.concatenate([labels[:, 1:], -jnp.ones_like(labels[:, -1:])],
+                           axis=1)
+    mask = (lab2 >= 0).astype(F32)
+    return chunked_head_loss(cfg, layout, dirs, z, jnp.maximum(lab2, 0),
+                             mask, params["head"])
+
+
+# ---------------------------------------------------------------------------
+# Caches
+# ---------------------------------------------------------------------------
+def abstract_cache(cfg: ModelConfig, layout: Layout, batch: int, length: int):
+    dirs = entry_dirs()
+    L = min(length, cfg.window) if cfg.window else length
+    c: Dict[str, Any] = {}
+    if cfg.family in (Family.DENSE, Family.VLM):
+        if cfg.mla is not None:
+            c["layers"] = stack_tree(mla.mla_cache_init(layout, cfg, dirs,
+                                                        batch, L), cfg.n_layers)
+        else:
+            c["layers"] = stack_tree(B.kv_cache_init(layout, cfg, dirs, batch, L),
+                                     cfg.n_layers)
+    elif cfg.family == Family.MOE:
+        fk, nmoe = moe_layer_counts(cfg)
+        one = (mla.mla_cache_init(layout, cfg, dirs, batch, L)
+               if cfg.mla is not None
+               else B.kv_cache_init(layout, cfg, dirs, batch, L))
+        if fk:
+            c["dense"] = stack_tree(one, fk)
+        c["moe"] = stack_tree(one, nmoe)
+    elif cfg.family == Family.HYBRID:
+        c["mamba"] = stack_tree(mamba2.mamba_cache_init(layout, cfg, dirs, batch),
+                                cfg.n_layers)
+        if cfg.ssm.attn_every:
+            n_shared = sum(1 for _, a in hybrid_plan(cfg) if a)
+            attn_len = min(L, cfg.window) if cfg.window else L
+            c["shared"] = stack_tree(B.kv_cache_init(layout, cfg, dirs, batch,
+                                                     attn_len), n_shared)
+    elif cfg.family == Family.SSM:
+        n_m = sum(n for k, n in xlstm_plan(cfg) if k == "m")
+        n_s = cfg.n_layers - n_m
+        c["mlstm"] = stack_tree(xlstm.mlstm_cache_init(layout, cfg, dirs, batch),
+                                n_m)
+        if n_s:
+            c["slstm"] = stack_tree(xlstm.slstm_cache_init(layout, cfg, dirs,
+                                                           batch), n_s)
+    elif cfg.family == Family.AUDIO:
+        c["layers"] = stack_tree(B.kv_cache_init(layout, cfg, dirs, batch, L),
+                                 cfg.n_layers)
+        c["cross"] = encdec.cross_kv_cache_init(layout, cfg, dirs, batch)
+    return c
+
+
+# ---------------------------------------------------------------------------
+# Dry-run input specs
+# ---------------------------------------------------------------------------
+def input_specs(cfg: ModelConfig, layout: Layout, shape: ShapeConfig):
+    """ShapeDtypeStructs (with shardings) for every model input."""
+    dirs = entry_dirs()
+    Bn, S = shape.global_batch, shape.seq_len
+    i32 = jnp.int32
+
+    def sds(shp, dtype, spec):
+        return jax.ShapeDtypeStruct(shp, dtype, sharding=layout.sharding(spec))
+
+    tok_spec = _token_seq_spec(layout, dirs)
+    if shape.kind == "decode":
+        batch = {
+            "token": sds((Bn, 1), i32, P(layout.batch_spec(), None)),
+            "pos": sds((Bn,), i32, P(layout.batch_spec())),
+        }
+        cache = abstract_arrays(abstract_cache(cfg, layout, Bn, S), layout)
+        return batch, cache
+
+    if cfg.family == Family.VLM:
+        nv = cfg.n_vision_tokens
+        batch = {
+            "tokens": sds((Bn, S - nv), i32, tok_spec),
+            "patch_embeds": sds((Bn, nv, cfg.d_model), jnp.bfloat16,
+                                P(layout.batch_spec(), None, None)),
+        }
+    elif cfg.family == Family.AUDIO:
+        enc = cfg.encoder
+        batch = {
+            "frames": sds((Bn, enc.n_frames, cfg.d_model), jnp.bfloat16,
+                          act_spec(layout, dirs)),
+            "tokens": sds((Bn, S), i32, tok_spec),
+        }
+    else:
+        batch = {"tokens": sds((Bn, S), i32, tok_spec)}
+
+    if shape.kind == "train":
+        if cfg.family == Family.VLM:
+            batch["labels"] = sds((Bn, S - cfg.n_vision_tokens), i32, tok_spec)
+        else:
+            batch["labels"] = sds((Bn, S), i32, tok_spec)
+    return (batch,)
+
+
+def _token_seq_spec(layout: Layout, dirs: Dirs):
+    if layout.strategy == "3d":
+        seq = tuple(a for a in (*layout.seq_axes, dirs.in_ax)
+                    if layout.size(a) > 1)
+    elif layout.strategy == "2d":
+        seq = tuple(a for a in (*layout.seq_axes, "y") if layout.size(a) > 1)
+    else:
+        seq = tuple(a for a in layout.seq_axes if layout.size(a) > 1)
+    return P(layout.batch_spec(), seq or None)

@@ -1,0 +1,2 @@
+from .optimizers import (OptState, adamw_init, adafactor_init, make_optimizer,
+                         make_schedule, clip_by_global_norm, opt_state_abstract)

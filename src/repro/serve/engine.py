@@ -1,0 +1,116 @@
+"""Batched serving engine: prefill + decode with a KV cache, greedy or
+temperature sampling, simple continuous-batching request scheduler.
+
+Works for the dense-attention families (prefill hand-off implemented); the
+recurrent families decode from their state caches.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..config import Family, ModelConfig
+from ..core.params import init_params
+from ..core.topology import Layout
+from ..models import transformer
+
+
+@dataclasses.dataclass
+class Request:
+    uid: int
+    prompt: List[int]
+    max_new: int = 32
+    out: List[int] = dataclasses.field(default_factory=list)
+    done: bool = False
+
+
+class Engine:
+    """Slot-based continuous batching: fixed decode batch, per-slot position
+    tracking; finished slots are refilled from the queue each step."""
+
+    def __init__(self, cfg: ModelConfig, layout: Layout, params, *,
+                 batch_size: int = 8, max_len: int = 512, temperature: float = 0.0):
+        self.cfg, self.layout, self.params = cfg, layout, params
+        self.B, self.max_len = batch_size, max_len
+        self.temperature = temperature
+        self.cache = init_params(
+            transformer.abstract_cache(cfg, layout, batch_size, max_len),
+            jax.random.key(0))
+        self.pos = np.zeros(batch_size, np.int32)
+        self.slots: List[Optional[Request]] = [None] * batch_size
+        self.queue: List[Request] = []
+
+        def decode_step(params, batch, cache):
+            logits, cache = transformer.forward(cfg, layout, params, batch,
+                                                mode="decode", cache=cache)
+            return logits, cache
+
+        self._decode = jax.jit(decode_step, donate_argnums=(2,))
+
+    def submit(self, req: Request):
+        self.queue.append(req)
+
+    def _fill_slots(self):
+        for i in range(self.B):
+            if self.slots[i] is None and self.queue:
+                req = self.queue.pop(0)
+                self.slots[i] = req
+                req._fed = 0            # tokens of the prompt fed so far
+                self.pos[i] = 0
+
+    def step(self):
+        """One global decode step: each live slot feeds either its next
+        prompt token (sequential prefill) or its last sampled token."""
+        self._fill_slots()
+        tok = np.zeros((self.B, 1), np.int32)
+        for i, req in enumerate(self.slots):
+            if req is None:
+                continue
+            if req._fed < len(req.prompt):
+                tok[i, 0] = req.prompt[req._fed]
+            elif req.out:
+                tok[i, 0] = req.out[-1]
+        batch = {"token": jnp.asarray(tok),
+                 "pos": jnp.asarray(self.pos)}
+        logits, self.cache = self._decode(self.params, batch, self.cache)
+        logits = np.asarray(jax.device_get(logits), np.float32)
+
+        for i, req in enumerate(self.slots):
+            if req is None:
+                continue
+            self.pos[i] += 1
+            if req._fed < len(req.prompt):
+                req._fed += 1
+                if req._fed < len(req.prompt):
+                    continue
+            nxt = self._sample(logits[i])
+            req.out.append(int(nxt))
+            if len(req.out) >= req.max_new or self.pos[i] >= self.max_len - 1:
+                req.done = True
+                self.slots[i] = None
+
+    def _sample(self, logits: np.ndarray) -> int:
+        if self.temperature <= 0:
+            return int(logits.argmax())
+        p = logits / self.temperature
+        p = np.exp(p - p.max())
+        p /= p.sum()
+        return int(np.random.default_rng().choice(len(p), p=p))
+
+    def run(self, requests: List[Request], progress: Callable = None):
+        for r in requests:
+            self.submit(r)
+        steps = 0
+        t0 = time.time()
+        while self.queue or any(s is not None for s in self.slots):
+            self.step()
+            steps += 1
+            if progress and steps % 16 == 0:
+                progress(steps)
+        return {"steps": steps, "wall_s": time.time() - t0,
+                "tokens": sum(len(r.out) for r in requests)}

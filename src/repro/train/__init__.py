@@ -1,0 +1,2 @@
+from .step import (make_train_step, make_forward_loss, make_prefill_step,
+                   make_decode_step)

@@ -1,0 +1,55 @@
+"""Train / prefill / decode step factories.
+
+The returned functions are pure (params, opt_state, batch) -> ... and are
+meant to be jitted by the caller (launcher, dry-run, tests).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..config import ModelConfig, OptimConfig
+from ..core.topology import Layout
+from ..models import transformer
+from ..optim import make_optimizer
+
+
+def make_train_step(cfg: ModelConfig, layout: Layout, opt_cfg: OptimConfig):
+    abstract = transformer.abstract_params(cfg, layout)
+    update = make_optimizer(opt_cfg, layout, param_tree=abstract)
+
+    def train_step(params, opt_state, batch):
+        def loss_fn(p):
+            loss, metrics = transformer.forward(cfg, layout, p, batch,
+                                                mode="train")
+            return loss, metrics
+
+        (loss, metrics), grads = jax.value_and_grad(loss_fn, has_aux=True)(params)
+        params2, opt_state2, opt_metrics = update(params, grads, opt_state)
+        metrics = dict(metrics, loss=loss, **opt_metrics)
+        return params2, opt_state2, metrics
+
+    return train_step
+
+
+def make_forward_loss(cfg: ModelConfig, layout: Layout):
+    def fwd(params, batch):
+        return transformer.forward(cfg, layout, params, batch, mode="train")
+    return fwd
+
+
+def make_prefill_step(cfg: ModelConfig, layout: Layout):
+    def prefill_step(params, batch):
+        return transformer.forward(cfg, layout, params, batch, mode="prefill")
+    return prefill_step
+
+
+def make_decode_step(cfg: ModelConfig, layout: Layout):
+    def decode_step(params, batch, cache):
+        logits, new_cache = transformer.forward(cfg, layout, params, batch,
+                                                mode="decode", cache=cache)
+        return logits, new_cache
+    return decode_step

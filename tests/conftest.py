@@ -1,0 +1,11 @@
+# NOTE: deliberately does NOT set --xla_force_host_platform_device_count:
+# smoke tests and benches run on the single real device.  Multi-device
+# semantics are exercised in tests/test_multidev.py via subprocesses.
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax  # noqa: E402
+
+jax.config.update("jax_enable_x64", False)

@@ -1,0 +1,82 @@
+"""The assigned architecture table, verified field by field."""
+import pytest
+
+from repro.config import Family
+from repro.configs.registry import ARCH_IDS, all_configs, get
+
+# arch: (layers, d_model, heads, kv, d_ff, vocab-as-assigned)
+ASSIGNED = {
+    "gemma-2b": (18, 2048, 8, 1, 16384, 256000),
+    "qwen3-4b": (36, 2560, 32, 8, 9728, 151936),
+    "internvl2-2b": (24, 2048, 16, 8, 8192, 92553),
+    "tinyllama-1.1b": (22, 2048, 32, 4, 5632, 32000),
+    "whisper-medium": (24, 1024, 16, 16, 4096, 51865),
+    "zamba2-1.2b": (38, 2048, 32, 32, 8192, 32000),
+    "mixtral-8x7b": (32, 4096, 32, 8, 14336, 32000),
+    "xlstm-350m": (24, 1024, 4, 4, 0, 50304),
+    "moonshot-v1-16b-a3b": (48, 2048, 16, 16, 1408, 163840),
+    "deepseek-v3-671b": (61, 7168, 128, 128, 2048, 129280),
+}
+
+FAMILIES = {
+    "gemma-2b": Family.DENSE, "qwen3-4b": Family.DENSE,
+    "internvl2-2b": Family.VLM, "tinyllama-1.1b": Family.DENSE,
+    "whisper-medium": Family.AUDIO, "zamba2-1.2b": Family.HYBRID,
+    "mixtral-8x7b": Family.MOE, "xlstm-350m": Family.SSM,
+    "moonshot-v1-16b-a3b": Family.MOE, "deepseek-v3-671b": Family.MOE,
+}
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_assigned_dims(arch):
+    cfg = get(arch)
+    L, d, nh, nkv, ff, vocab = ASSIGNED[arch]
+    assert cfg.n_layers == L
+    assert cfg.d_model == d
+    assert cfg.n_heads == nh
+    assert cfg.n_kv == nkv
+    assert cfg.d_ff == ff
+    # vocab may be padded upward (for TP divisibility), never shrunk
+    assert cfg.vocab >= vocab and cfg.vocab - vocab < 16
+    assert cfg.family == FAMILIES[arch]
+    assert cfg.source
+
+
+def test_special_fields():
+    assert get("gemma-2b").head_dim == 256
+    assert get("qwen3-4b").qk_norm
+    assert get("zamba2-1.2b").ssm.d_state == 64
+    mx = get("mixtral-8x7b")
+    assert mx.moe.n_experts == 8 and mx.moe.top_k == 2 and mx.window == 4096
+    ds = get("deepseek-v3-671b")
+    assert ds.moe.n_experts == 256 and ds.moe.top_k == 8
+    assert ds.moe.n_shared == 1 and ds.mla is not None and ds.mtp
+    ms = get("moonshot-v1-16b-a3b")
+    assert ms.moe.n_experts == 64 and ms.moe.top_k == 6
+    assert get("internvl2-2b").n_vision_tokens == 1024
+    assert get("whisper-medium").encoder is not None
+    assert get("xlstm-350m").ssm.slstm_every == 8
+
+
+def test_param_counts_plausible():
+    # real parameter-tree counts within a band of the advertised sizes
+    from repro.models.transformer import param_counts
+    bands = {"tinyllama-1.1b": (0.9e9, 1.5e9), "gemma-2b": (2.0e9, 3.2e9),
+             "mixtral-8x7b": (42e9, 52e9), "deepseek-v3-671b": (600e9, 720e9),
+             "xlstm-350m": (0.2e9, 0.55e9), "zamba2-1.2b": (0.9e9, 2.0e9)}
+    for arch, (lo, hi) in bands.items():
+        n, _ = param_counts(get(arch))
+        assert lo <= n <= hi, (arch, n)
+
+
+def test_active_params():
+    from repro.models.transformer import param_counts
+    _, act = param_counts(get("deepseek-v3-671b"))
+    assert 25e9 <= act <= 50e9, act        # ~37B advertised
+    _, act = param_counts(get("mixtral-8x7b"))
+    assert 10e9 <= act <= 18e9             # ~13B advertised
+
+
+def test_all_configs_loadable():
+    cfgs = all_configs()
+    assert len(cfgs) == 10

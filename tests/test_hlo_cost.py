@@ -1,0 +1,74 @@
+"""Unit tests for the trip-count-aware HLO cost parser (the roofline's
+data source)."""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.launch.hlo_cost import HloCost
+
+
+def _compile(fn, *args):
+    return jax.jit(fn).lower(*args).compile()
+
+
+def test_scan_flops_trip_counted():
+    def scanned(x, ws):
+        def f(c, w):
+            return c @ w, None
+        y, _ = jax.lax.scan(f, x, ws)
+        return y
+
+    x = jax.ShapeDtypeStruct((128, 128), jnp.float32)
+    ws = jax.ShapeDtypeStruct((16, 128, 128), jnp.float32)
+    hc = HloCost(_compile(scanned, x, ws).as_text())
+    want = 16 * 2 * 128 ** 3
+    assert abs(hc.flops() - want) / want < 0.01
+
+
+def test_nested_scan():
+    def nested(x, ws):
+        def outer(c, w3):
+            def inner(ci, w):
+                return ci @ w, None
+            c2, _ = jax.lax.scan(inner, c, w3)
+            return c2, None
+        y, _ = jax.lax.scan(outer, x, ws)
+        return y
+
+    x = jax.ShapeDtypeStruct((64, 64), jnp.float32)
+    ws = jax.ShapeDtypeStruct((4, 3, 64, 64), jnp.float32)
+    hc = HloCost(_compile(nested, x, ws).as_text())
+    want = 12 * 2 * 64 ** 3
+    assert abs(hc.flops() - want) / want < 0.01
+
+
+def test_unrolled_matches_scanned():
+    def scanned(x, ws):
+        def f(c, w):
+            return c @ w, None
+        return jax.lax.scan(f, x, ws)[0]
+
+    def unrolled(x, ws):
+        for i in range(8):
+            x = x @ ws[i]
+        return x
+
+    x = jax.ShapeDtypeStruct((64, 64), jnp.float32)
+    ws = jax.ShapeDtypeStruct((8, 64, 64), jnp.float32)
+    f1 = HloCost(_compile(scanned, x, ws).as_text()).flops()
+    f2 = HloCost(_compile(unrolled, x, ws).as_text()).flops()
+    assert abs(f1 - f2) / f2 < 0.01
+
+
+def test_bytes_exclude_fusion_internals():
+    # a chain of elementwise ops fuses to ~one read + one write
+    def chain(x):
+        for _ in range(20):
+            x = jnp.sin(x) * 1.01 + 0.1
+        return x
+
+    x = jax.ShapeDtypeStruct((1024, 1024), jnp.float32)
+    hc = HloCost(_compile(chain, x).as_text())
+    nbytes = 1024 * 1024 * 4
+    # should be O(few) x array size, NOT 20x
+    assert hc.bytes_accessed() < 8 * nbytes

@@ -1,0 +1,90 @@
+"""Pallas kernel allclose sweeps (shapes x dtypes) against the pure-jnp
+oracles in kernels/ref.py, all in interpret mode (CPU)."""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.kernels import ops, ref
+
+F32 = jnp.float32
+
+
+@pytest.mark.parametrize("mkn", [(128, 128, 128), (256, 384, 128),
+                                 (64, 32, 48), (512, 256, 256)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("act", ["none", "gelu", "silu"])
+def test_matmul_kernel(mkn, dtype, act):
+    m, k, n = mkn
+    x = jax.random.normal(jax.random.key(1), (m, k), dtype)
+    w = jax.random.normal(jax.random.key(2), (k, n), dtype)
+    got = ops.pallas_matmul(x, w, act=act)
+    want = ref.matmul_ref(x, w, act=act)
+    tol = 1e-4 if dtype == jnp.float32 else 5e-2
+    err = jnp.max(jnp.abs(got.astype(F32) - want.astype(F32)))
+    denom = jnp.max(jnp.abs(want.astype(F32))) + 1e-6
+    assert err / denom < tol, (err, denom)
+
+
+@pytest.mark.parametrize("shape", [(2, 128, 128, 4, 4, 64),
+                                   (1, 256, 256, 8, 2, 64),
+                                   (2, 128, 256, 4, 1, 32),
+                                   (1, 64, 192, 6, 3, 16)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("mode", ["causal", "full", "window"])
+def test_flash_attention_kernel(shape, dtype, mode):
+    b, sq, sk, hq, hkv, d = shape
+    causal = mode != "full"
+    window = 64 if mode == "window" else 0
+    q = jax.random.normal(jax.random.key(1), (b, sq, hq, d), dtype)
+    k = jax.random.normal(jax.random.key(2), (b, sk, hkv, d), dtype)
+    v = jax.random.normal(jax.random.key(3), (b, sk, hkv, d), dtype)
+    off = sk - sq if causal else 0
+    got = ops.pallas_flash(q, k, v, causal=causal, window=window, q_offset=off)
+    want = ref.attention_ref(q, k, v, causal=causal, window=window,
+                             q_offset=off)
+    tol = 3e-5 if dtype == jnp.float32 else 3e-2
+    assert jnp.max(jnp.abs(got.astype(F32) - want.astype(F32))) < tol
+
+
+@pytest.mark.parametrize("shape", [(4, 256, 64, 16, 64), (2, 512, 32, 64, 128),
+                                   (1, 128, 16, 8, 32)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_ssd_kernel(shape, dtype):
+    bh, T, dh, N, chunk = shape
+    xb = (jax.random.normal(jax.random.key(1), (bh, T, dh)) * 0.5).astype(dtype)
+    la = -jnp.abs(jax.random.normal(jax.random.key(2), (bh, T))) * 0.1
+    B = (jax.random.normal(jax.random.key(3), (bh, T, N)) * 0.3).astype(dtype)
+    C = (jax.random.normal(jax.random.key(4), (bh, T, N)) * 0.3).astype(dtype)
+    got = ops.pallas_ssd(xb, la.astype(dtype), B, C, chunk=chunk)
+    want = ref.ssd_ref(xb, la.astype(dtype), B, C)
+    tol = 1e-3 if dtype == jnp.float32 else 1e-1
+    assert jnp.max(jnp.abs(got.astype(F32) - want.astype(F32))) < tol
+
+
+def test_kernel_hook_installs():
+    """enable_kernels routes the 3-D island matmuls through Pallas and
+    produces the same result."""
+    from repro.core import ops3d
+    from repro.core.topology import single_device_layout
+    lay = single_device_layout("3d")
+    x = jax.random.normal(jax.random.key(1), (2, 8, 64), jnp.float32)
+    w = jax.random.normal(jax.random.key(2), (64, 32), jnp.float32)
+    base = jax.jit(lambda a, b: ops3d.matmul3d(lay, "y", "z", a, b))(x, w)
+    ops.enable_kernels(interpret=True)
+    try:
+        got = jax.jit(lambda a, b: ops3d.matmul3d(lay, "y", "z", a, b))(x, w)
+    finally:
+        ops.disable_kernels()
+    assert jnp.allclose(base, got, atol=1e-4)
+
+
+@pytest.mark.parametrize("shape", [(4, 8, 256), (2, 64, 512), (16, 1024)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("zc", [False, True])
+def test_rmsnorm_kernel(shape, dtype, zc):
+    x = jax.random.normal(jax.random.key(1), shape, dtype)
+    g = jax.random.normal(jax.random.key(2), (shape[-1],), dtype) * 0.1 + 1
+    got = ops.pallas_rmsnorm(x, g, zero_centered=zc)
+    want = ref.rmsnorm_ref(x, g, zero_centered=zc)
+    tol = 1e-5 if dtype == jnp.float32 else 2e-2
+    assert jnp.max(jnp.abs(got.astype(F32) - want.astype(F32))) < tol

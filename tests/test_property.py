@@ -1,0 +1,140 @@
+"""Property-based tests (hypothesis) on system invariants."""
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.topology import factor_model_axis
+from repro.models.mamba2 import ssd_chunked
+from repro.models.xlstm import mlstm_scan, mlstm_scan_seq
+from repro.optim.optimizers import clip_by_global_norm
+
+F32 = jnp.float32
+
+
+# ---------------------------------------------------------------------------
+# topology
+# ---------------------------------------------------------------------------
+@given(st.integers(1, 4096))
+@settings(max_examples=60, deadline=None)
+def test_factor_model_axis_3d_valid(n):
+    px, py, pz = factor_model_axis(n, "3d")
+    assert px * py * pz == n
+    assert px <= py <= pz
+
+
+@given(st.integers(0, 11))
+@settings(max_examples=12, deadline=None)
+def test_factor_model_axis_near_cube_for_powers_of_two(k):
+    n = 2 ** k
+    px, py, pz = factor_model_axis(n, "3d")
+    assert px * py * pz == n
+    # spread at most one factor of two
+    assert pz // px <= 2
+
+
+@given(st.integers(1, 64))
+@settings(max_examples=30, deadline=None)
+def test_factor_1d(n):
+    assert factor_model_axis(n, "1d") == (1, 1, n)
+
+
+# ---------------------------------------------------------------------------
+# recurrences: chunked forms == sequential forms for arbitrary shapes/values
+# ---------------------------------------------------------------------------
+@given(b=st.integers(1, 3), nh=st.integers(1, 3),
+       log2t=st.integers(3, 7), dh=st.sampled_from([8, 16]),
+       chunk=st.sampled_from([8, 16, 32]), seed=st.integers(0, 2 ** 16))
+@settings(max_examples=20, deadline=None)
+def test_mlstm_chunked_matches_sequential(b, nh, log2t, dh, chunk, seed):
+    T = 2 ** log2t
+    ks = jax.random.split(jax.random.key(seed), 5)
+    q = jax.random.normal(ks[0], (b, T, nh, dh))
+    k = jax.random.normal(ks[1], (b, T, nh, dh))
+    v = jax.random.normal(ks[2], (b, T, nh, dh))
+    ig = jax.random.normal(ks[3], (b, T, nh)) * 2
+    fg = jax.nn.log_sigmoid(jax.random.normal(ks[4], (b, T, nh)) * 2 + 2)
+    h1, (C1, n1, m1) = mlstm_scan_seq(q, k, v, ig, fg)
+    h2, (C2, n2, m2) = mlstm_scan(q, k, v, ig, fg, chunk=chunk)
+    np.testing.assert_allclose(np.asarray(h1), np.asarray(h2),
+                               atol=2e-3, rtol=2e-3)
+    np.testing.assert_allclose(np.asarray(m1), np.asarray(m2), atol=1e-4)
+
+
+@given(b=st.integers(1, 2), nh=st.sampled_from([2, 4]),
+       log2t=st.integers(4, 7), N=st.sampled_from([4, 8]),
+       chunk=st.sampled_from([8, 16]), seed=st.integers(0, 2 ** 16))
+@settings(max_examples=20, deadline=None)
+def test_ssd_chunk_invariance(b, nh, log2t, N, chunk, seed):
+    """The SSD output must not depend on the chunk size."""
+    T = 2 ** log2t
+    dh, G = 8, nh
+    ks = jax.random.split(jax.random.key(seed), 4)
+    x = jax.random.normal(ks[0], (b, T, nh, dh)) * 0.5
+    dt = jax.random.normal(ks[1], (b, T, nh))
+    B = jax.random.normal(ks[2], (b, T, G, N)) * 0.3
+    C = jax.random.normal(ks[3], (b, T, G, N)) * 0.3
+    A = jnp.zeros((nh,))
+    D = jnp.ones((nh,))
+    y1, h1 = ssd_chunked(x, dt, A, B, C, D, chunk)
+    y2, h2 = ssd_chunked(x, dt, A, B, C, D, T)  # single chunk
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2),
+                               atol=3e-4, rtol=3e-3)
+    np.testing.assert_allclose(np.asarray(h1), np.asarray(h2),
+                               atol=3e-4, rtol=3e-3)
+
+
+# ---------------------------------------------------------------------------
+# attention invariants
+# ---------------------------------------------------------------------------
+@given(sq=st.sampled_from([16, 32]), extra=st.sampled_from([0, 16]),
+       h=st.sampled_from([1, 2]), seed=st.integers(0, 2 ** 16))
+@settings(max_examples=15, deadline=None)
+def test_causal_attention_prefix_invariance(sq, extra, h, seed):
+    """Causal attention output at position t ignores keys with pos > t."""
+    from repro.kernels.ref import attention_ref
+    d = 16
+    ks = jax.random.split(jax.random.key(seed), 3)
+    q = jax.random.normal(ks[0], (1, sq, h, d))
+    k = jax.random.normal(ks[1], (1, sq + extra, h, d))
+    v = jax.random.normal(ks[2], (1, sq + extra, h, d))
+    full = attention_ref(q, k[:, :sq], v[:, :sq], causal=True)
+    # appending future keys must not change causal outputs
+    ext = attention_ref(q, k, v, causal=True)
+    np.testing.assert_allclose(np.asarray(full), np.asarray(ext),
+                               atol=1e-5, rtol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# optimizer invariants
+# ---------------------------------------------------------------------------
+@given(scale=st.floats(0.1, 100.0), seed=st.integers(0, 2 ** 16))
+@settings(max_examples=20, deadline=None)
+def test_clip_by_global_norm(scale, seed):
+    g = {"a": jax.random.normal(jax.random.key(seed), (7, 3)) * scale,
+         "b": jax.random.normal(jax.random.key(seed + 1), (5,)) * scale}
+    clipped, gn = clip_by_global_norm(g, 1.0)
+    new_norm = math.sqrt(sum(float(jnp.sum(x ** 2))
+                             for x in jax.tree.leaves(clipped)))
+    assert new_norm <= 1.0 + 1e-3
+    if float(gn) <= 1.0:  # below threshold: unchanged
+        np.testing.assert_allclose(np.asarray(clipped["a"]),
+                                   np.asarray(g["a"]), rtol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# cross entropy
+# ---------------------------------------------------------------------------
+@given(v=st.sampled_from([8, 64]), seed=st.integers(0, 2 ** 16))
+@settings(max_examples=20, deadline=None)
+def test_xent_matches_log_softmax(v, seed):
+    from repro.core.linear3d import cross_entropy
+    logits = jax.random.normal(jax.random.key(seed), (2, 5, v)) * 3
+    labels = jax.random.randint(jax.random.key(seed + 1), (2, 5), 0, v)
+    got = cross_entropy(logits, labels)
+    want = -jnp.mean(jnp.take_along_axis(
+        jax.nn.log_softmax(logits, axis=-1), labels[..., None], axis=-1))
+    np.testing.assert_allclose(float(got), float(want), rtol=1e-5, atol=1e-5)

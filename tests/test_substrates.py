@@ -1,0 +1,143 @@
+"""Substrate tests: optimizer descent, data pipeline, checkpoint roundtrip,
+serving engine, schedules."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.config import OptimConfig, ShapeConfig, reduced
+from repro.configs.registry import get
+from repro.core.params import init_params
+from repro.core.topology import single_device_layout
+from repro.models import transformer
+
+
+@pytest.fixture(scope="module")
+def layout():
+    return single_device_layout("3d")
+
+
+def test_adamw_descends_quadratic():
+    from repro.optim import make_optimizer
+    from repro.optim.optimizers import OptState
+    cfg = OptimConfig(lr=0.1, warmup=0, schedule="none", weight_decay=0.0,
+                      total_steps=100)
+    lay = single_device_layout()
+    upd = make_optimizer(cfg, lay)
+    p = {"w": jnp.array([5.0, -3.0])}
+    st = OptState(jnp.zeros((), jnp.int32),
+                  {"w": jnp.zeros(2)}, {"w": jnp.zeros(2)})
+    for _ in range(150):
+        g = {"w": 2 * p["w"]}
+        p, st, _ = upd(p, g, st)
+    assert float(jnp.abs(p["w"]).max()) < 0.05
+
+
+def test_adafactor_descends():
+    from repro.optim import make_optimizer
+    from repro.optim.optimizers import OptState
+    cfg = OptimConfig(name="adafactor", lr=0.1, warmup=0, schedule="none",
+                      weight_decay=0.0, total_steps=100)
+    lay = single_device_layout()
+    upd = make_optimizer(cfg, lay)
+    w = jax.random.normal(jax.random.key(0), (64, 64)) * 3
+    p = {"w": w}
+    st = OptState(jnp.zeros((), jnp.int32), None,
+                  {"w": {"row": jnp.zeros((64,)), "col": jnp.zeros((64,))}})
+    l0 = float(jnp.sum(p["w"] ** 2))
+    for _ in range(100):
+        g = {"w": 2 * p["w"]}
+        p, st, _ = upd(p, g, st)
+    assert float(jnp.sum(p["w"] ** 2)) < 0.1 * l0
+
+
+def test_schedules():
+    from repro.optim import make_schedule
+    cfg = OptimConfig(lr=1e-3, warmup=10, total_steps=100, schedule="cosine")
+    s = make_schedule(cfg)
+    assert float(s(jnp.array(0))) < 1.1e-4
+    assert abs(float(s(jnp.array(10))) - 1e-3) < 1e-6
+    assert float(s(jnp.array(100))) < 1e-6
+
+
+def test_data_pipeline_shapes(layout):
+    from repro.data import DataConfig, TokenStream
+    cfg = reduced(get("tinyllama-1.1b"))
+    shape = ShapeConfig("t", 64, 4, "train")
+    it = iter(TokenStream(cfg, layout, shape))
+    b = next(it)
+    assert b["tokens"].shape == (4, 64)
+    assert b["labels"].shape == (4, 64)
+    assert b["tokens"].dtype == jnp.int32
+    assert int(b["tokens"].max()) < cfg.vocab
+    # labels are next-token shifted view of the same stream
+    b2 = next(it)
+    assert not np.array_equal(np.asarray(b["tokens"]), np.asarray(b2["tokens"]))
+
+
+def test_data_pipeline_file(tmp_path, layout):
+    from repro.data import DataConfig, TokenStream, write_packed_tokens
+    cfg = reduced(get("tinyllama-1.1b"))
+    path = str(tmp_path / "toks.npy")
+    write_packed_tokens(path, np.arange(100000) % cfg.vocab)
+    shape = ShapeConfig("t", 32, 2, "train")
+    it = iter(TokenStream(cfg, layout, shape, DataConfig("file", path)))
+    b = next(it)
+    toks = np.asarray(b["tokens"])
+    labs = np.asarray(b["labels"])
+    assert np.array_equal(toks[0, 1:], labs[0, :-1])  # shift-by-one
+
+
+def test_checkpoint_roundtrip(tmp_path, layout):
+    from repro.checkpoint import store
+    cfg = reduced(get("tinyllama-1.1b"))
+    params = transformer.init(cfg, layout, jax.random.key(0))
+    d = store.save(str(tmp_path), 7, params, extra={"foo": 1})
+    assert os.path.isdir(d)
+    assert store.latest_step(str(tmp_path)) == 7
+    abstract = transformer.abstract_params(cfg, layout)
+    restored, _, extra = store.restore(str(tmp_path), 7, abstract, layout)
+    assert extra == {"foo": 1}
+    for a, b in zip(jax.tree.leaves(params), jax.tree.leaves(restored)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_serving_engine_greedy(layout):
+    from repro.serve import Engine, Request
+    cfg = reduced(get("tinyllama-1.1b"))
+    params = transformer.init(cfg, layout, jax.random.key(0))
+    eng = Engine(cfg, layout, params, batch_size=2, max_len=64)
+    reqs = [Request(uid=i, prompt=[1, 2, 3, 4], max_new=5) for i in range(3)]
+    stats = eng.run(list(reqs))
+    assert all(r.done for r in reqs)
+    assert all(len(r.out) == 5 for r in reqs)
+    assert stats["tokens"] == 15
+    # determinism: same prompt -> same greedy output
+    assert reqs[0].out == reqs[1].out == reqs[2].out
+
+
+def test_serving_engine_matches_decode_consistency(layout):
+    """Two engines, different batch slots, same prompts -> same outputs."""
+    from repro.serve import Engine, Request
+    cfg = reduced(get("qwen3-4b"))
+    params = transformer.init(cfg, layout, jax.random.key(0))
+    outs = []
+    for bs in (1, 4):
+        eng = Engine(cfg, layout, params, batch_size=bs, max_len=32)
+        r = Request(uid=0, prompt=[5, 6, 7], max_new=4)
+        eng.run([r])
+        outs.append(r.out)
+    assert outs[0] == outs[1]
+
+
+def test_train_loss_decreases(layout):
+    losses = _train("tinyllama-1.1b", steps=25)
+    assert losses[-1] < losses[0] - 0.5, losses
+
+
+def _train(arch, steps):
+    from repro.launch.train import main
+    return main(["--arch", arch, "--reduced", "--steps", str(steps),
+                 "--batch", "8", "--seq", "64", "--log-every", "5"])
