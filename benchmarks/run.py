@@ -1,6 +1,6 @@
 """Benchmark harness — one function per paper table/figure + roofline.
 
-``python -m benchmarks.run [table1|table2|comm|kernels|minirun|roofline|all]``
+``python -m benchmarks.run [table1|table2|comm|kernels|minirun|ppsweep|roofline|all]``
 
 Prints ``name,us_per_call,derived`` CSV rows per the harness contract:
 derived entries carry the model-based quantity (step time / comm bytes /
@@ -240,6 +240,75 @@ def minirun():
 
 
 # ---------------------------------------------------------------------------
+# Pipeline sweep: 3-D-only vs 3-D+PP on 8 host devices (real wall-clock)
+# ---------------------------------------------------------------------------
+PPSWEEP_SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import sys, time, json, dataclasses
+sys.path.insert(0, %(src)r)
+import jax
+from repro.config import ShapeConfig, reduced
+from repro.configs.registry import get
+from repro.core.plan import ParallelPlan
+from repro.data.pipeline import TokenStream
+from repro.models import transformer
+from repro.train.step import make_train_step
+from repro.config import OptimConfig
+
+cfg = dataclasses.replace(reduced(get("tinyllama-1.1b"), d_model=256),
+                          n_layers=4, remat=False)
+opt_cfg = OptimConfig(lr=1e-3, warmup=2, total_steps=10)
+out = {}
+# same 8 devices, same global batch: 3-D-only vs 3-D+PP compositions
+plans = {
+    "3d8":        ParallelPlan(n_model=8),
+    "3d4_pp2m4":  ParallelPlan(n_model=4, cube=(1, 2, 2), n_stages=2,
+                               microbatches=4),
+    "3d4_pp2m8":  ParallelPlan(n_model=4, cube=(1, 2, 2), n_stages=2,
+                               microbatches=8),
+}
+for name, plan in plans.items():
+    lay = plan.build()
+    params = transformer.init(cfg, lay, jax.random.key(0))
+    from repro.optim.optimizers import opt_state_abstract
+    from repro.core.params import init_params
+    opt_state = init_params(opt_state_abstract(
+        transformer.abstract_params(cfg, lay), lay, opt_cfg), jax.random.key(1))
+    shape = ShapeConfig("b", 128, 16, "train")
+    batch = next(iter(TokenStream(cfg, lay, shape)))
+    step = jax.jit(make_train_step(cfg, lay, opt_cfg))
+    p2, o2, m = step(params, opt_state, batch)
+    jax.block_until_ready(m["loss"])
+    t0 = time.perf_counter()
+    for _ in range(3):
+        p2, o2, m = step(p2, o2, batch)
+        jax.block_until_ready(m["loss"])
+    out[name] = {"t_step": (time.perf_counter() - t0) / 3,
+                 "bubble": plan.bubble_fraction(),
+                 "loss": float(m["loss"])}
+print("RESULT " + json.dumps(out))
+"""
+
+
+def ppsweep():
+    env = dict(os.environ, PYTHONPATH=os.path.join(ROOT, "src"))
+    proc = subprocess.run(
+        [sys.executable, "-c", PPSWEEP_SCRIPT % {"src": os.path.join(ROOT, "src")}],
+        env=env, capture_output=True, text=True, timeout=3000)
+    for line in proc.stdout.splitlines():
+        if line.startswith("RESULT "):
+            res = json.loads(line[len("RESULT "):])
+            for name, r in res.items():
+                _row(f"ppsweep_train_step|{name}|8hostdev",
+                     f"{r['t_step']*1e6:.0f}",
+                     f"bubble={r['bubble']:.3f} loss={r['loss']:.4f}")
+            return
+    print(proc.stderr[-2000:], file=sys.stderr)
+    _row("ppsweep", "", "FAILED")
+
+
+# ---------------------------------------------------------------------------
 # Roofline from the dry-run results
 # ---------------------------------------------------------------------------
 def roofline(path=None):
@@ -266,6 +335,8 @@ def main() -> None:
         kernels()
     if which in ("minirun", "all"):
         minirun()
+    if which in ("ppsweep", "all"):
+        ppsweep()
     if which in ("roofline", "all"):
         roofline()
 

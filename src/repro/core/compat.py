@@ -1,0 +1,45 @@
+"""Compatibility shims across jax versions.
+
+The codebase targets the current jax API (``jax.shard_map`` with
+``check_vma``, ``jax.make_mesh(..., axis_types=...)``); the container ships
+an older jax (0.4.x) where ``shard_map`` lives in ``jax.experimental`` with a
+``check_rep`` kwarg and meshes have no ``axis_types``.  Everything funnels
+through here so the rest of the tree is version-agnostic.
+"""
+from __future__ import annotations
+
+import jax
+
+_HAS_NEW_SHARD_MAP = hasattr(jax, "shard_map")
+_HAS_AXIS_TYPES = hasattr(jax.sharding, "AxisType")
+
+if not _HAS_NEW_SHARD_MAP:
+    from jax.experimental.shard_map import shard_map as _old_shard_map
+
+
+def shard_map(f, *, mesh, in_specs, out_specs, check_vma: bool = True):
+    """``jax.shard_map`` under new jax, ``check_rep``-mapped under old."""
+    if _HAS_NEW_SHARD_MAP:
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, check_vma=check_vma)
+    return _old_shard_map(f, mesh=mesh, in_specs=in_specs,
+                          out_specs=out_specs, check_rep=check_vma)
+
+
+def auto_axis_types(n: int):
+    """axis_types kwarg value for an n-axis Auto mesh ({} when unsupported)."""
+    if _HAS_AXIS_TYPES:
+        return {"axis_types": (jax.sharding.AxisType.Auto,) * n}
+    return {}
+
+
+def make_mesh(shape, axes):
+    return jax.make_mesh(shape, axes, **auto_axis_types(len(axes)))
+
+
+def tpu_compiler_params(**kw):
+    """pltpu.CompilerParams (new) / pltpu.TPUCompilerParams (old jax)."""
+    from jax.experimental.pallas import tpu as pltpu
+    cls = getattr(pltpu, "CompilerParams", None) \
+        or getattr(pltpu, "TPUCompilerParams")
+    return cls(**kw)

@@ -26,6 +26,7 @@ import jax.numpy as jnp
 from jax import lax
 from jax.sharding import PartitionSpec as P
 
+from .compat import shard_map
 from .topology import Layout
 
 # ---------------------------------------------------------------------------
@@ -66,7 +67,7 @@ def _w_spec(in_ax: str, out_ax: str) -> P:
 
 
 def _shmap(layout, body, in_specs, out_specs):
-    return jax.shard_map(body, mesh=layout.mesh, in_specs=in_specs,
+    return shard_map(body, mesh=layout.mesh, in_specs=in_specs,
                          out_specs=out_specs, check_vma=False)
 
 

@@ -93,12 +93,15 @@ def param_bytes(tree) -> int:
                for p in jax.tree.leaves(tree, is_leaf=is_param))
 
 
-def stack(p: Param, n: int) -> Param:
-    """Stack a Param for scan-over-layers: prepend the layer dim (unsharded)."""
+def stack(p: Param, n: int, shard: Optional[str] = None) -> Param:
+    """Stack a Param for scan-over-layers: prepend the layer dim.
+
+    ``shard`` optionally names a mesh axis for the new leading dim — used by
+    pipeline parallelism to spread the stage dim over 'pp'."""
     return dataclasses.replace(
-        p, shape=(n, *p.shape), spec=P(None, *(p.spec or ())),
+        p, shape=(n, *p.shape), spec=P(shard, *(p.spec or ())),
         fan_axis=p.fan_axis if p.fan_axis < 0 else p.fan_axis + 1)
 
 
-def stack_tree(tree, n: int):
-    return tree_map_params(lambda p: stack(p, n), tree)
+def stack_tree(tree, n: int, shard: Optional[str] = None):
+    return tree_map_params(lambda p: stack(p, n, shard), tree)

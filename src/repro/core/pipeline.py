@@ -1,0 +1,138 @@
+"""Pipeline-parallel schedule over the 'pp' mesh axis.
+
+Stage partitioning and the pipelined tick loop live here; the model
+(models/transformer.py) supplies the per-stage compute and the loss head.
+
+Design (composes with the paper's 3-D cube, Megatron-style — arXiv
+2104.04473):
+
+  * The layer stack is cut into ``pp`` contiguous stages of ``n_layers/pp``
+    blocks.  Stage s's block parameters are stacked with a leading stage dim
+    sharded over the 'pp' mesh axis, so each pipeline group holds only its
+    own 1/pp of the depth.  Embedding is consumed at stage 0 and the LM head
+    at the last stage (their tables stay replicated along 'pp'; the cube
+    still shards them).
+  * The schedule runs ``T = m + pp - 1`` ticks for ``m`` microbatches.  At
+    every tick all stages compute concurrently (a ``vmap`` over the stage
+    dim — each stage applying *its* parameter slab, each on a different
+    microbatch), then activations move stage s -> s+1 through a
+    ``ppermute`` point-to-point transfer.  Stage 0 injects microbatch
+    ``min(t, m-1)``; the last stage emits microbatch ``t - (pp-1)``.
+  * The whole loop is a differentiable ``lax.scan``: reverse-mode grads
+    replay the ticks backward with the transposed ppermute, i.e. the
+    backward pipeline.  With per-block remat this is the 1F1B-equivalent
+    synchronous schedule; its bubble is the classic ``(pp-1)/m`` idle
+    fraction, which the analytic cost model reports.
+
+Inside a stage every linear still runs the paper's direction-exchange 3-D
+algorithm — the shard_map islands vmap cleanly over the stage dim.
+"""
+from __future__ import annotations
+
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.sharding import PartitionSpec as P
+
+from .compat import shard_map
+from .params import stack_tree
+from .topology import Layout, bubble_fraction, pipeline_efficiency
+
+F32 = jnp.float32
+
+
+# ---------------------------------------------------------------------------
+# Stage partitioning
+# ---------------------------------------------------------------------------
+def stage_stack_tree(block_tree, n_layers: int, layout: Layout):
+    """Stack one block's Param tree into (pp, layers_per_stage, ...) with the
+    stage dim sharded over 'pp' — stage s owns layers [s*Lps, (s+1)*Lps)."""
+    per = layout.stage_layers(n_layers)
+    return stack_tree(stack_tree(block_tree, per), layout.n_stages,
+                      shard="pp")
+
+
+def state_spec(layout: Layout, act_p: P) -> P:
+    """PartitionSpec of the (pp, B_mb, S, H) pipeline state buffer."""
+    return P("pp", *act_p)
+
+
+# ---------------------------------------------------------------------------
+# Point-to-point stage boundary transfer
+# ---------------------------------------------------------------------------
+def shift_stages(layout: Layout, state, act_p: P):
+    """Move activations stage s -> s+1 along 'pp' via collective-permute.
+
+    state: (pp, B_mb, S, H) with the leading dim sharded over 'pp'.  The last
+    stage's output is dropped (it was consumed by the loss head); stage 0's
+    slot is zero-filled (overwritten by the next injection).
+    """
+    pp = layout.n_stages
+    if pp == 1:
+        return state
+    perm = [(s, s + 1) for s in range(pp - 1)]
+    spec = state_spec(layout, act_p)
+
+    def body(blk):
+        return lax.ppermute(blk, "pp", perm)
+
+    return shard_map(body, mesh=layout.mesh, in_specs=spec, out_specs=spec,
+                     check_vma=False)(state)
+
+
+# ---------------------------------------------------------------------------
+# The schedule
+# ---------------------------------------------------------------------------
+def pipeline_schedule(layout: Layout, *, x_mbs, stage_params,
+                      stage_fn: Callable, collect_fn: Callable,
+                      collect_init, act_p: P):
+    """Run the synchronous pipelined loop.
+
+    x_mbs:        (m, B_mb, S, H) embedded microbatches (stage-0 feed)
+    stage_params: pytree with leading (pp, layers_per_stage, ...) dims
+    stage_fn:     ((B_mb, S, H), one-stage params) -> (B_mb, S, H)
+    collect_fn:   (acc, last_stage_out, mb_index) -> acc; mb_index < 0 marks
+                  warm-up ticks whose output is pipeline garbage
+    Returns the final accumulator after m + pp - 1 ticks.
+    """
+    pp = layout.n_stages
+    m = x_mbs.shape[0]
+    sspec = layout.sharding(state_spec(layout, act_p))
+    wsc = lax.with_sharding_constraint
+
+    state0 = jnp.zeros((pp,) + x_mbs.shape[1:], x_mbs.dtype)
+    state0 = wsc(state0, sspec)
+
+    def tick(carry, t):
+        state, acc = carry
+        inj = lax.dynamic_index_in_dim(x_mbs, jnp.minimum(t, m - 1), 0,
+                                       keepdims=True)
+        state = lax.dynamic_update_slice_in_dim(state, inj.astype(state.dtype),
+                                                0, axis=0)
+        state = wsc(state, sspec)
+        out = jax.vmap(stage_fn)(state, stage_params)
+        out = wsc(out, sspec)
+        acc = collect_fn(acc, out[pp - 1], t - (pp - 1))
+        state = shift_stages(layout, out, act_p)
+        return (state, acc), None
+
+    (_, acc), _ = lax.scan(tick, (state0, collect_init),
+                           jnp.arange(m + pp - 1))
+    return acc
+
+
+# ---------------------------------------------------------------------------
+# Analytic schedule model (shared by dryrun / benchmarks; the formulas live
+# in core.topology so every layer reports the same numbers)
+# ---------------------------------------------------------------------------
+def pipeline_report(n_stages: int, microbatches: int) -> dict:
+    m = max(microbatches, 1)
+    return {
+        "n_stages": n_stages,
+        "microbatches": m,
+        "ticks": m + n_stages - 1,
+        "bubble_fraction": bubble_fraction(n_stages, m),
+        "efficiency": pipeline_efficiency(n_stages, m),
+    }

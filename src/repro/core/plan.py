@@ -1,0 +1,104 @@
+"""ParallelPlan: one object unifying data / 3-D tensor / pipeline
+parallelism and microbatching.
+
+The paper's cube maximizes *tensor* parallelism; production-scale training
+composes it with pipeline stages and gradient accumulation (the 3D+PP
+composition of Megatron-LM, arXiv 2104.04473).  A ParallelPlan captures the
+full composition:
+
+    ParallelPlan(n_dp=2, n_model=8, n_stages=2, microbatches=4).build()
+
+yields a 6-axis Layout; everything downstream (models, train step, launch,
+dry-run) derives its behaviour from that Layout:
+
+  * dp / pod          -> data parallelism (batch sharding, ZeRO-1 opt state)
+  * (x, y, z) cube    -> the paper's 3-D tensor parallelism inside a stage
+  * pp                -> contiguous pipeline stages over the layer stack
+  * microbatches      -> gradient accumulation; with pp > 1 this is the
+                         pipeline's m, bubble fraction = (pp-1)/m
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+from . import topology
+from .topology import Layout, factor_model_axis, make_layout
+
+
+@dataclasses.dataclass(frozen=True)
+class ParallelPlan:
+    n_pod: int = 1
+    n_dp: int = 1
+    n_model: int = 1
+    n_stages: int = 1               # pipeline-parallel degree (pp axis)
+    microbatches: int = 1           # grad-accumulation / pipeline m
+    strategy: str = "3d"            # 3d | 2d | 1d tensor strategy per stage
+    cube: Optional[Tuple[int, int, int]] = None
+    batch_axes: Tuple[str, ...] = ("pod", "dp", "x")
+    seq_axes: Tuple[str, ...] = ()
+    gspmd_linears: bool = False
+
+    # ---- derived ----
+    @property
+    def n_devices(self) -> int:
+        return self.n_pod * self.n_dp * self.n_stages * self.n_model
+
+    @property
+    def cube_dims(self) -> Tuple[int, int, int]:
+        return self.cube or factor_model_axis(self.n_model, self.strategy)
+
+    def bubble_fraction(self) -> float:
+        """Pipeline bubble (pp-1)/m — idle fraction of the 1F1B schedule
+        relative to perfectly overlapped stage compute."""
+        return topology.bubble_fraction(self.n_stages, self.microbatches)
+
+    def pipeline_efficiency(self) -> float:
+        """m / (m + pp - 1): useful-tick fraction of the schedule."""
+        return topology.pipeline_efficiency(self.n_stages, self.microbatches)
+
+    # ---- validation ----
+    def validate(self, n_layers: Optional[int] = None,
+                 global_batch: Optional[int] = None) -> "ParallelPlan":
+        if self.n_stages < 1 or self.microbatches < 1:
+            raise ValueError("n_stages and microbatches must be >= 1")
+        if self.n_stages > 1 and self.microbatches < self.n_stages:
+            # legal but the bubble dominates; flag obvious misconfigurations
+            import warnings
+            warnings.warn(
+                f"microbatches={self.microbatches} < pp={self.n_stages}: "
+                f"bubble fraction {self.bubble_fraction():.2f} >= 1; "
+                "raise --microbatch for pipeline efficiency")
+        if n_layers is not None and n_layers % self.n_stages:
+            raise ValueError(
+                f"n_layers={n_layers} not divisible by pp={self.n_stages}")
+        if global_batch is not None and global_batch % self.microbatches:
+            raise ValueError(
+                f"global_batch={global_batch} not divisible by "
+                f"microbatches={self.microbatches}")
+        px, py, pz = self.cube_dims
+        if px * py * pz != self.n_model:
+            raise ValueError(f"cube {self.cube_dims} != n_model {self.n_model}")
+        return self
+
+    # ---- materialization ----
+    def build(self, devices=None) -> Layout:
+        return make_layout(
+            n_pod=self.n_pod, n_dp=self.n_dp, n_model=self.n_model,
+            strategy=self.strategy, cube=self.cube,
+            batch_axes=self.batch_axes, seq_axes=self.seq_axes,
+            devices=devices, gspmd_linears=self.gspmd_linears,
+            n_pp=self.n_stages, microbatches=self.microbatches)
+
+    def describe(self) -> dict:
+        px, py, pz = self.cube_dims
+        return {
+            "devices": self.n_devices,
+            "data": self.n_pod * self.n_dp,
+            "cube": f"{px}x{py}x{pz}",
+            "pp": self.n_stages,
+            "microbatches": self.microbatches,
+            "bubble_fraction": round(self.bubble_fraction(), 4),
+            "pipeline_efficiency": round(self.pipeline_efficiency(), 4),
+            "strategy": self.strategy,
+        }

@@ -5,13 +5,14 @@ p**3 cube to a rectangular grid (px, py, pz) so that a pod's 16-chip model axis
 factors as (2, 2, 4); the cube (p, p, p) is the special case used in the
 paper-fidelity tests.
 
-Framework mesh axes (always all five, sizes may be 1):
+Framework mesh axes (always all six, sizes may be 1):
 
-    ("pod", "dp", "x", "y", "z")
+    ("pod", "dp", "pp", "x", "y", "z")
 
-``pod``/``dp`` carry data parallelism (and FSDP param sharding); (x, y, z) is
-the model cube.  Activations cycle between two layouts, following the paper's
-direction-exchange rule (section 3.2):
+``pod``/``dp`` carry data parallelism (and FSDP param sharding); ``pp`` is
+the pipeline-stage axis (size = number of pipeline stages, 1 = no
+pipelining); (x, y, z) is the model cube.  Activations cycle between two
+layouts, following the paper's direction-exchange rule (section 3.2):
 
     X  : (B, S, H)  sharded  (BATCH, in_ax, out_ax)
     Y  : (B, S, F)  sharded  (BATCH, out_ax, in_ax)     after a 3-D linear
@@ -30,11 +31,24 @@ from typing import Optional, Sequence, Tuple
 import jax
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
-AXES = ("pod", "dp", "x", "y", "z")
+from .compat import auto_axis_types, make_mesh as _compat_make_mesh
+
+AXES = ("pod", "dp", "pp", "x", "y", "z")
 
 
-def _auto(n):
-    return (jax.sharding.AxisType.Auto,) * n
+def bubble_fraction(n_stages: int, microbatches: int) -> float:
+    """Idle fraction (pp-1)/m of the synchronous 1F1B/GPipe schedule —
+    the single source for every bubble report (Layout, ParallelPlan,
+    pipeline schedule, analytic cost model)."""
+    if n_stages <= 1:
+        return 0.0
+    return (n_stages - 1) / max(microbatches, 1)
+
+
+def pipeline_efficiency(n_stages: int, microbatches: int) -> float:
+    """m / (m + pp - 1): useful-tick fraction of the schedule."""
+    m = max(microbatches, 1)
+    return m / (m + n_stages - 1)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -60,6 +74,9 @@ class Layout:
     # extra axes (beyond in_ax) sharding the sequence dim, e.g. ("pod",) for
     # context-parallel prefill when the batch is too small for all DP axes.
     seq_axes: Tuple[str, ...] = ()
+    # gradient-accumulation microbatches per optimizer step (schedule
+    # bookkeeping; with pp > 1 this is the pipeline's m, bubble = (pp-1)/m)
+    microbatches: int = 1
 
     # ---- sizes ----
     @property
@@ -87,8 +104,30 @@ class Layout:
         return self.size(("pod", "dp"))
 
     @property
+    def n_stages(self) -> int:
+        """Pipeline-parallel degree (size of the 'pp' axis; 1 = no pipeline)."""
+        return self.size("pp") if "pp" in self.sizes else 1
+
+    @property
     def n_devices(self) -> int:
         return math.prod(self.sizes.values())
+
+    # ---- pipeline bookkeeping ----
+    def stage_layers(self, n_layers: int) -> int:
+        """Layers per contiguous pipeline stage (must divide evenly)."""
+        if n_layers % self.n_stages:
+            raise ValueError(
+                f"n_layers={n_layers} not divisible by pp={self.n_stages}")
+        return n_layers // self.n_stages
+
+    def stage_bounds(self, n_layers: int) -> Tuple[Tuple[int, int], ...]:
+        """[(start, end)) layer ranges per stage, contiguous in depth."""
+        per = self.stage_layers(n_layers)
+        return tuple((s * per, (s + 1) * per) for s in range(self.n_stages))
+
+    def bubble_fraction(self) -> float:
+        """1F1B / GPipe pipeline bubble (pp-1)/m as a fraction of ideal time."""
+        return bubble_fraction(self.n_stages, self.microbatches)
 
     # ---- specs ----
     def batch_spec(self):
@@ -158,25 +197,27 @@ def factor_model_axis(n_model: int, strategy: str) -> Tuple[int, int, int]:
 def make_mesh(n_pod: int = 1, n_dp: int = 1, n_model: int = 1,
               strategy: str = "3d",
               cube: Optional[Tuple[int, int, int]] = None,
-              devices=None) -> Mesh:
-    """Build the 5-axis framework mesh.  Device order is row-major over
-    (pod, data, model) — identical to the prescribed production mesh's
-    device array reshaped, so the physical topology is the same."""
+              devices=None, n_pp: int = 1) -> Mesh:
+    """Build the 6-axis framework mesh.  Device order is row-major over
+    (pod, data, pipeline, model) — with pp=1 this is identical to the
+    prescribed production mesh's device array reshaped, so the physical
+    topology is the same; pp>1 carves stages out of that same order."""
     px, py, pz = cube or factor_model_axis(n_model, strategy)
-    shape = (n_pod, n_dp, px, py, pz)
+    shape = (n_pod, n_dp, n_pp, px, py, pz)
     if devices is not None:
         import numpy as np
         devs = np.asarray(devices).reshape(shape)
-        return Mesh(devs, AXES, axis_types=_auto(5))
-    return jax.make_mesh(shape, AXES, axis_types=_auto(5))
+        return Mesh(devs, AXES, **auto_axis_types(len(AXES)))
+    return _compat_make_mesh(shape, AXES)
 
 
 def make_layout(n_pod=1, n_dp=1, n_model=1, strategy="3d", cube=None,
                 batch_axes=("pod", "dp", "x"), seq_axes=(), devices=None,
-                gspmd_linears=False) -> Layout:
-    mesh = make_mesh(n_pod, n_dp, n_model, strategy, cube, devices)
+                gspmd_linears=False, n_pp=1, microbatches=1) -> Layout:
+    mesh = make_mesh(n_pod, n_dp, n_model, strategy, cube, devices, n_pp)
     return Layout(mesh=mesh, strategy=strategy, gspmd_linears=gspmd_linears,
-                  batch_axes=tuple(batch_axes), seq_axes=tuple(seq_axes))
+                  batch_axes=tuple(batch_axes), seq_axes=tuple(seq_axes),
+                  microbatches=microbatches)
 
 
 def single_device_layout(strategy: str = "3d") -> Layout:

@@ -17,6 +17,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from ..core.compat import tpu_compiler_params
+
 ACTS = {
     "none": lambda x: x,
     "gelu": lambda x: jax.nn.gelu(x, approximate=True),
@@ -69,7 +71,7 @@ def matmul(x, w, bias: Optional[jax.Array] = None, *, bm: int = 128,
         out_specs=pl.BlockSpec((bm, bn), lambda i, j, s: (i, j)),
         out_shape=jax.ShapeDtypeStruct((m, n), x.dtype),
         scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=tpu_compiler_params(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
     )(x, w, bias)

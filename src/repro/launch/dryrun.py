@@ -88,11 +88,13 @@ def collective_stats(hlo: str):
     return {"bytes_per_device": total, "by_kind": per_op, "counts": count}
 
 
-def build_layout(arch: str, shape_name: str, multi_pod: bool, strategy: str):
+def build_layout(arch: str, shape_name: str, multi_pod: bool, strategy: str,
+                 n_pp: int = 1, microbatches: int = 1):
     args = shape_layout_args(shape_name, multi_pod)
     cube = cube_for(arch, 16, strategy)
     lay = make_framework_layout(multi_pod=multi_pod, strategy=strategy,
-                                cube=cube, **args)
+                                cube=cube, n_pp=n_pp,
+                                microbatches=microbatches, **args)
     # drop batch axes that exceed the global batch
     shape = SHAPES[shape_name]
     bax = []
@@ -107,7 +109,7 @@ def build_layout(arch: str, shape_name: str, multi_pod: bool, strategy: str):
 
 def lower_one(arch: str, shape_name: str, *, multi_pod: bool,
               strategy: str = "3d", compile_: bool = True,
-              force_window: int = 0):
+              force_window: int = 0, n_pp: int = 1, microbatches: int = 1):
     cfg = get(arch)
     if force_window and not cfg.window:
         # sliding-window VARIANT of a full-attention arch: makes long_500k
@@ -123,7 +125,16 @@ def lower_one(arch: str, shape_name: str, *, multi_pod: bool,
         return {"arch": arch, "shape": shape_name, "multi_pod": multi_pod,
                 "status": "SKIP", "reason": "full quadratic attention; "
                 "sub-quadratic required (DESIGN.md §4)"}
-    layout = build_layout(arch, shape_name, multi_pod, strategy)
+    if n_pp > 1 and shape.kind != "train":
+        return {"arch": arch, "shape": shape_name, "multi_pod": multi_pod,
+                "status": "SKIP",
+                "reason": f"pp={n_pp} is a training schedule; serve with pp=1"}
+    if n_pp > 1 and (cfg.family.value != "dense" or cfg.n_layers % n_pp):
+        return {"arch": arch, "shape": shape_name, "multi_pod": multi_pod,
+                "status": "SKIP",
+                "reason": f"pp={n_pp} needs a dense arch with divisible depth"}
+    layout = build_layout(arch, shape_name, multi_pod, strategy, n_pp,
+                          microbatches)
     specs = transformer.input_specs(cfg, layout, shape)
     params = abstract_arrays(transformer.abstract_params(cfg, layout), layout)
 
@@ -148,6 +159,9 @@ def lower_one(arch: str, shape_name: str, *, multi_pod: bool,
     res = {"arch": arch_tag, "shape": shape_name, "multi_pod": multi_pod,
            "strategy": strategy, "status": "LOWERED",
            "mesh": dict(layout.mesh.shape), "t_lower_s": round(t_lower, 1)}
+    if n_pp > 1:
+        from repro.core.pipeline import pipeline_report
+        res["pipeline"] = pipeline_report(n_pp, microbatches)
     if not compile_:
         return res
 
@@ -187,12 +201,20 @@ def main():
     ap.add_argument("--multi-pod", action="store_true")
     ap.add_argument("--single-pod", action="store_true")
     ap.add_argument("--strategy", default="3d", choices=["3d", "2d", "1d"])
+    ap.add_argument("--pp", type=int, default=1,
+                    help="pipeline stages (carved out of the data axis)")
+    ap.add_argument("--microbatch", type=int, default=0,
+                    help="pipeline microbatches m (bubble = (pp-1)/m); "
+                         "default: 8 when --pp > 1, else 1 (the seed's "
+                         "single-shot train step)")
     ap.add_argument("--lower-only", action="store_true")
     ap.add_argument("--force-window", type=int, default=0,
                     help="run a sliding-window VARIANT of full-attention archs")
     ap.add_argument("--out", default=None, help="append JSONL results here")
     args = ap.parse_args()
 
+    if not args.microbatch:
+        args.microbatch = 8 if args.pp > 1 else 1
     archs = ARCH_IDS if args.arch in (None, "all") else [args.arch]
     shapes = list(SHAPES) if args.shape in (None, "all") else [args.shape]
     pods = []
@@ -211,11 +233,15 @@ def main():
         for shape in shapes:
             for mp in pods:
                 tag = f"{arch} x {shape} x {'2pod' if mp else '1pod'} [{args.strategy}]"
+                if args.pp > 1:
+                    tag += f" pp={args.pp} m={args.microbatch}"
                 try:
                     res = lower_one(arch, shape, multi_pod=mp,
                                     strategy=args.strategy,
                                     compile_=not args.lower_only,
-                                    force_window=args.force_window)
+                                    force_window=args.force_window,
+                                    n_pp=args.pp,
+                                    microbatches=args.microbatch)
                 except Exception as e:
                     traceback.print_exc()
                     res = {"arch": arch, "shape": shape, "multi_pod": mp,
@@ -228,6 +254,10 @@ def main():
                              f" flops={res['cost']['flops']:.3e}"
                              f" comm={res['collectives']['bytes_per_device']/2**30:.3f}GiB"
                              f" (lower {res['t_lower_s']}s compile {res['t_compile_s']}s)")
+                if "pipeline" in res:
+                    pl = res["pipeline"]
+                    line += (f" bubble={pl['bubble_fraction']:.3f}"
+                             f" eff={pl['efficiency']:.3f}")
                 elif res["status"] == "SKIP":
                     line += f" ({res['reason']})"
                 print(line, flush=True)

@@ -25,6 +25,24 @@ DTYPE_BYTES = {"f64": 8, "f32": 4, "f16": 2, "bf16": 2, "s64": 8, "s32": 4,
 COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
                "collective-permute")
 
+
+def pipeline_time_model(t_compute: float, n_stages: int,
+                        microbatches: int) -> Dict[str, float]:
+    """Analytic 1F1B step-time model on top of a measured/derived per-step
+    compute time: with m microbatches over pp stages the schedule runs
+    m + pp - 1 stage-ticks, so the step takes t_compute * (1 + (pp-1)/m)
+    — the classic pipeline bubble (arXiv 2104.04473 §2.2)."""
+    from ..core.topology import bubble_fraction
+    m = max(microbatches, 1)
+    bubble = bubble_fraction(n_stages, m)
+    return {
+        "n_stages": n_stages,
+        "microbatches": m,
+        "bubble_fraction": bubble,
+        "t_ideal": t_compute,
+        "t_with_bubble": t_compute * (1.0 + bubble),
+    }
+
 _COMP_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*\(.*\)\s*->.*\{\s*$")
 _DEF_RE = re.compile(r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*"
                      r"(\(?)([a-z0-9]+)\[([0-9,]*)\]")
@@ -35,6 +53,9 @@ _WHILE_RE2 = re.compile(r"while\(.*?\).*?body=%?([\w.\-]+),\s*"
 _CONST_RE = re.compile(r"[su]\d+\[\]\s+constant\((\d+)\)")
 _CALL_RE = re.compile(r"(?:calls=|to_apply=)%?([\w.\-]+)")
 _DOT_DIMS_RE = re.compile(r"lhs_contracting_dims=\{([0-9,]*)\}")
+_DOT_LHS_RE = re.compile(
+    r" dot\((?:[a-z0-9]+\[(?P<dims>[0-9,]*)\](?:\{[^}]*\})?\s+)?"
+    r"%?(?P<name>[\w.\-]+)")
 _GROUPS_RE = re.compile(r"replica_groups=\{(\{[^}]*\})")
 _GROUPS2_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
 
@@ -142,14 +163,18 @@ class HloCost:
                 md = _DOT_DIMS_RE.search(line)
                 contract = 1
                 if md:
-                    # operand names inside dot(...)
-                    args = re.search(r"dot\(([^)]*)\)", line)
-                    lhs = None
-                    if args:
-                        first = args.group(1).split(",")[0].strip()
-                        lhs = first.lstrip("%").split(" ")[-1].lstrip("%")
-                    if lhs and lhs in self.defs:
-                        ldims = self.defs[lhs][1].split(",")
+                    # lhs operand: older XLA prints typed operands
+                    # ("dot(f32[32,32]{1,0} %name, ...)"), newer prints bare
+                    # names — read the inline type when present, else fall
+                    # back to the operand's def
+                    ldims = None
+                    ma = _DOT_LHS_RE.search(line)
+                    if ma:
+                        if ma.group("dims") is not None:
+                            ldims = ma.group("dims").split(",")
+                        elif ma.group("name") in self.defs:
+                            ldims = self.defs[ma.group("name")][1].split(",")
+                    if ldims:
                         for di in md.group(1).split(","):
                             if di:
                                 contract *= int(ldims[int(di)])

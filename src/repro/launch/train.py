@@ -23,6 +23,11 @@ def main(argv=None):
     ap.add_argument("--dp", type=int, default=1)
     ap.add_argument("--model", type=int, default=1)
     ap.add_argument("--strategy", default="3d", choices=["3d", "2d", "1d"])
+    ap.add_argument("--pp", type=int, default=1,
+                    help="pipeline-parallel stages (n_layers must divide)")
+    ap.add_argument("--microbatch", type=int, default=1,
+                    help="gradient-accumulation microbatches per step "
+                         "(the pipeline's m when --pp > 1)")
     ap.add_argument("--reduced", action="store_true",
                     help="use the smoke-test reduced variant")
     ap.add_argument("--layers", type=int, default=0)
@@ -48,7 +53,7 @@ def main(argv=None):
     from repro.config import OptimConfig, ShapeConfig, reduced
     from repro.configs.registry import get
     from repro.core.params import count_params
-    from repro.core.topology import make_layout
+    from repro.core.plan import ParallelPlan
     from repro.data.pipeline import DataConfig, TokenStream
     from repro.models import transformer
     from repro.optim import make_optimizer
@@ -66,14 +71,17 @@ def main(argv=None):
     if changes:
         cfg = dataclasses.replace(cfg, **changes)
 
-    layout = make_layout(n_pod=1, n_dp=args.dp, n_model=args.model,
-                         strategy=args.strategy)
+    plan = ParallelPlan(n_dp=args.dp, n_model=args.model,
+                        strategy=args.strategy, n_stages=args.pp,
+                        microbatches=args.microbatch)
+    plan.validate(n_layers=cfg.n_layers, global_batch=args.batch)
+    layout = plan.build()
     shape = ShapeConfig("cli", args.seq, args.batch, "train")
     opt_cfg = OptimConfig(name=args.optimizer, lr=args.lr, warmup=args.warmup,
                           total_steps=args.steps)
 
     print(f"arch={cfg.arch} layers={cfg.n_layers} d={cfg.d_model} "
-          f"mesh={dict(layout.mesh.shape)} strategy={args.strategy}")
+          f"mesh={dict(layout.mesh.shape)} plan={plan.describe()}")
     params = transformer.init(cfg, layout, jax.random.key(0))
     n_params = sum(x.size for x in jax.tree.leaves(params))
     print(f"params: {n_params/1e6:.1f}M")
@@ -115,7 +123,11 @@ def main(argv=None):
         if args.ckpt_dir and args.ckpt_every and (step + 1) % args.ckpt_every == 0:
             d = store.save(args.ckpt_dir, step + 1, params, opt_state)
             print(f"saved {d}")
-    print(f"done: first loss {losses[0]:.4f} -> last {losses[-1]:.4f}")
+    if losses:
+        print(f"done: first loss {losses[0]:.4f} -> last {losses[-1]:.4f}")
+    else:
+        # checkpoint restore already at/after --steps: the loop never ran
+        print(f"nothing to do: restored step {start} >= --steps {args.steps}")
     return losses
 
 

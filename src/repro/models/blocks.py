@@ -25,6 +25,7 @@ from ..core import ops3d
 from ..core.linear3d import (act_spec, act_spec_decode, bias_param, norm_param,
                              plinear, rmsnorm, layernorm, weight_param, wsc)
 from ..core.params import Param
+from ..core.compat import shard_map
 from ..core.topology import Dirs, Layout
 
 F32 = jnp.float32
@@ -189,7 +190,7 @@ def attention(layout: Layout, cfg: ModelConfig, dirs: Dirs, q, k, v,
                                          causal=causal, window=window)
             return out
 
-    return jax.shard_map(body, mesh=layout.mesh,
+    return shard_map(body, mesh=layout.mesh,
                          in_specs=(qspec, kvspec, kvspec),
                          out_specs=qspec, check_vma=False)(q, k, v)
 
@@ -301,7 +302,7 @@ def attention_decode(layout: Layout, cfg: ModelConfig, dirs: Dirs,
         def body2(q, k_new, v_new, ck, cv, cpos, pos):
             out, ck2, cv2, cpos2 = body(q, k_new, v_new, ck, cv, cpos, pos)
             return out, ck2, cv2, cpos2
-        out, ck, cv, cpos = jax.shard_map(
+        out, ck, cv, cpos = shard_map(
             body2, mesh=layout.mesh,
             in_specs=(qspec, nkvspec, nkvspec, cspec.k, cspec.v, cspec.pos,
                       P(layout.batch_spec())),
@@ -346,7 +347,7 @@ def attention_decode(layout: Layout, cfg: ModelConfig, dirs: Dirs,
         return (o / jnp.maximum(l_s, 1e-30)[..., None]).reshape(
             b, 1, nloc, d).astype(q.dtype)
 
-    out = jax.shard_map(body4, mesh=layout.mesh,
+    out = shard_map(body4, mesh=layout.mesh,
                         in_specs=(qspec, cspec.k, cspec.v, cspec.pos,
                                   P(layout.batch_spec())),
                         out_specs=qspec, check_vma=False)(q, ck, cv, cpos, pos)
@@ -463,7 +464,7 @@ def _cross_decode(layout, cfg, dirs, q, k, v):
         return (o / jnp.maximum(l_s, 1e-30)[..., None]).reshape(
             b, 1, nloc, d).astype(q.dtype)
 
-    return jax.shard_map(body, mesh=layout.mesh, in_specs=(qspec, kvspec, kvspec),
+    return shard_map(body, mesh=layout.mesh, in_specs=(qspec, kvspec, kvspec),
                          out_specs=qspec, check_vma=False)(q, k, v)
 
 

@@ -20,6 +20,7 @@ from jax.sharding import PartitionSpec as P
 from ..config import ModelConfig
 from ..core.linear3d import norm_param, plinear, rmsnorm, weight_param, wsc
 from ..core.params import Param
+from ..core.compat import shard_map
 from ..core.topology import Dirs, Layout
 
 F32 = jnp.float32
@@ -241,7 +242,7 @@ def mamba_apply(layout: Layout, cfg: ModelConfig, dirs: Dirs, x, p,
 
         # conv over B/C at GSPMD level first (replicated feature dim)
         bc = _gspmd_causal_conv(bc, p["conv_bc"], p["conv_bc_b"], pre_act=False)
-        y = jax.shard_map(body, mesh=layout.mesh,
+        y = shard_map(body, mesh=layout.mesh,
                           in_specs=(xspec, rspec, rspec,
                                     _conv_spec(layout, dirs), _conv_spec1(layout, dirs),
                                     P(None), P(None), P(None)),

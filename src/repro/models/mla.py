@@ -25,6 +25,7 @@ from ..config import ModelConfig
 from ..core import ops3d
 from ..core.linear3d import plinear, rmsnorm, weight_param, wsc
 from ..core.params import Param
+from ..core.compat import shard_map
 from ..core.topology import Dirs, Layout
 from .blocks import _gather_axes, _head_axes, apply_rope, attention
 
@@ -221,7 +222,7 @@ def _mla_decode(layout: Layout, cfg: ModelConfig, dirs: Dirs, q_nope, q_rope,
         o = jnp.einsum("bhr,rhd->bhd", oc, w_uv.astype(F32))  # (b, nh_loc, dv)
         return o[:, None].astype(qn.dtype), cc, ckr, cpos
 
-    out, cc, ckr, cpos = jax.shard_map(
+    out, cc, ckr, cpos = shard_map(
         body, mesh=layout.mesh,
         in_specs=(qspec, qspec, lat_spec, lat_spec, cspec, cspec, pspec,
                   P(bs), w_spec),

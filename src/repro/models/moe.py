@@ -23,6 +23,7 @@ from jax.sharding import PartitionSpec as P
 from ..config import ModelConfig
 from ..core.linear3d import act_spec, act_spec_decode
 from ..core.params import Param
+from ..core.compat import shard_map
 from ..core.topology import Dirs, Layout
 
 F32 = jnp.float32
@@ -207,7 +208,7 @@ def moe_apply(layout: Layout, cfg: ModelConfig, dirs: Dirs, x, p,
     w3_arg = p["w3"] if gated else jnp.zeros((1, 1, 1), x.dtype)
     in_specs = (xspec, wr_spec, w1_spec, w2_spec,
                 w1_spec if gated else P(None, None, None))
-    y, aux = jax.shard_map(body, mesh=layout.mesh, in_specs=in_specs,
+    y, aux = shard_map(body, mesh=layout.mesh, in_specs=in_specs,
                            out_specs=(xspec, P()), check_vma=False)(
         x, p["w_router"], p["w1"], p["w2"], w3_arg)
 

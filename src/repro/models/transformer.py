@@ -15,9 +15,11 @@ from typing import Any, Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
+from jax import lax
 from jax.sharding import PartitionSpec as P
 
 from ..config import Family, ModelConfig, ShapeConfig
+from ..core import pipeline as pp_mod
 from ..core.linear3d import (act_spec, act_spec_decode, cross_entropy,
                              embed_lookup, embed_param, logits_spec,
                              plinear, weight_param, wsc)
@@ -100,8 +102,16 @@ def abstract_params(cfg: ModelConfig, layout: Layout):
     p: Dict[str, Any] = {"embed": embed_param(layout, dirs, cfg.vocab, d)}
 
     if cfg.family in (Family.DENSE, Family.VLM):
-        p["blocks"] = stack_tree(dense_block_params_for(layout, cfg, dirs),
-                                 cfg.n_layers)
+        block = dense_block_params_for(layout, cfg, dirs)
+        if layout.n_stages > 1:
+            # pipeline: (pp, layers_per_stage, ...) with the stage dim
+            # sharded over 'pp' — each pipeline group holds 1/pp of depth
+            _check_pipeline_support(cfg, layout)
+            p["blocks"] = pp_mod.stage_stack_tree(block, cfg.n_layers, layout)
+        else:
+            p["blocks"] = stack_tree(block, cfg.n_layers)
+    elif layout.n_stages > 1:
+        _check_pipeline_support(cfg, layout)
     elif cfg.family == Family.MOE:
         fk, nmoe = moe_layer_counts(cfg)
         if fk:
@@ -242,10 +252,80 @@ def _embed(cfg, layout, dirs, params, batch, decode=False):
     return x
 
 
+def _check_pipeline_support(cfg: ModelConfig, layout: Layout):
+    if cfg.family != Family.DENSE:
+        raise NotImplementedError(
+            f"pipeline parallelism (pp={layout.n_stages}) currently supports "
+            f"the dense decoder family only, got {cfg.family}")
+    layout.stage_layers(cfg.n_layers)          # divisibility check
+    if cfg.mtp:
+        raise NotImplementedError("mtp head not supported with pp > 1")
+
+
+def forward_pipelined(cfg: ModelConfig, layout: Layout, params, batch):
+    """Pipelined train forward: microbatched 1F1B-style schedule over the
+    'pp' stage axis.  Numerically equivalent to the pp=1 path on the same
+    global batch (equal-sized microbatches, mean-of-means loss)."""
+    _check_pipeline_support(cfg, layout)
+    dirs = entry_dirs()
+    m = max(layout.microbatches, 1)
+    tokens, labels = batch["tokens"], batch["labels"]
+    Bg, S = tokens.shape
+    if Bg % m:
+        raise ValueError(f"global batch {Bg} not divisible by microbatches {m}")
+    Bm = Bg // m
+
+    # embedding pinned to stage 0: embed the whole batch in the entry layout
+    # once (table replicated along 'pp', cube-sharded as usual), then split
+    # into the microbatch feed
+    x = _embed(cfg, layout, dirs, params, batch)
+    x_mbs = x.reshape(m, Bm, S, -1)
+    labs = labels.reshape(m, Bm, S)
+    positions = jnp.broadcast_to(jnp.arange(S), (Bm, S))
+    remat = cfg.remat
+
+    fn = lambda h, bp, c: apply_dense_block(layout, cfg, dirs, h, bp,
+                                            positions)
+
+    def stage_fn(h, stage_p):
+        h, _, _ = _scan_stack(fn, h, stage_p, remat=remat)
+        return h
+
+    def collect_fn(acc, last, mb_idx):
+        # head pinned to the last stage; warm-up ticks (mb_idx < 0) carry
+        # pipeline garbage and are masked out of the loss entirely.  Each
+        # microbatch mean is re-weighted by its valid-token count so the
+        # total is the global token mean, exactly as the pp=1 path computes
+        loss_sum, w_sum = acc
+        valid = (mb_idx >= 0).astype(F32)
+        lab = lax.dynamic_index_in_dim(labs, jnp.clip(mb_idx, 0, m - 1), 0,
+                                       keepdims=False)
+        h = B.apply_norm(cfg, last, params["ln_f"])
+        mask = (lab >= 0).astype(F32) * valid
+        w = jnp.sum(mask)
+        mb_loss = chunked_head_loss(cfg, layout, dirs, h,
+                                    jnp.maximum(lab, 0), mask, params["head"])
+        return (loss_sum + w * mb_loss, w_sum + w)
+
+    loss_sum, w_sum = pp_mod.pipeline_schedule(
+        layout, x_mbs=x_mbs, stage_params=params["blocks"],
+        stage_fn=stage_fn, collect_fn=collect_fn,
+        collect_init=(jnp.zeros((), F32), jnp.zeros((), F32)),
+        act_p=act_spec(layout, dirs))
+    loss = loss_sum / jnp.maximum(w_sum, 1.0)
+    return loss, {"xent": loss, "aux": jnp.zeros((), F32)}
+
+
 def forward(cfg: ModelConfig, layout: Layout, params, batch, *, mode: str,
             cache=None):
     """mode: 'train' -> (loss, metrics); 'prefill' -> (last_logits, cache);
     'decode' -> (logits, cache)."""
+    if layout.n_stages > 1:
+        if mode != "train":
+            raise NotImplementedError(
+                f"pp={layout.n_stages} supports mode='train' only (serve "
+                f"with a pp=1 layout); got {mode!r}")
+        return forward_pipelined(cfg, layout, params, batch)
     dirs = entry_dirs()
     decode = mode == "decode"
     remat = cfg.remat and mode == "train"

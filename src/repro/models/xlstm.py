@@ -15,6 +15,7 @@ from jax.sharding import PartitionSpec as P
 from ..config import ModelConfig
 from ..core.linear3d import norm_param, plinear, rmsnorm, weight_param
 from ..core.params import Param
+from ..core.compat import shard_map
 from ..core.topology import Dirs, Layout
 
 F32 = jnp.float32
@@ -272,7 +273,7 @@ def mlstm_apply(layout: Layout, cfg: ModelConfig, dirs: Dirs, x, p, positions,
                 y = lax.dynamic_slice_in_dim(y, off * (T // nsh), T // nsh, 1)
             return y
 
-        y = jax.shard_map(body, mesh=layout.mesh,
+        y = shard_map(body, mesh=layout.mesh,
                           in_specs=(xspec, xspec, xspec, rspec),
                           out_specs=xspec, check_vma=False)(q, k, v, gif)
         new_cache = None
@@ -339,7 +340,7 @@ def slstm_apply(layout: Layout, cfg: ModelConfig, dirs: Dirs, x, p, positions,
                 y = lax.dynamic_slice_in_dim(y, off * (T // nsh), T // nsh, 1)
             return y
 
-        y = jax.shard_map(body, mesh=layout.mesh,
+        y = shard_map(body, mesh=layout.mesh,
                           in_specs=(rspec, P(None, None, None, None)),
                           out_specs=rspec, check_vma=False)(g, p["R"])
         new_cache = None

@@ -11,23 +11,85 @@ from typing import Any, Dict, Tuple
 import jax
 import jax.numpy as jnp
 
-from ..config import ModelConfig, OptimConfig
+from ..config import Family, ModelConfig, OptimConfig
 from ..core.topology import Layout
 from ..models import transformer
 from ..optim import make_optimizer
 
 
+def _split_microbatches(batch, m: int):
+    """(B, ...) leaves -> (m, B/m, ...); batch order is preserved so the
+    concatenation of microbatches is exactly the original global batch."""
+    def split(a):
+        if a.shape[0] % m:
+            raise ValueError(
+                f"batch dim {a.shape[0]} not divisible by microbatches {m}")
+        return a.reshape(m, a.shape[0] // m, *a.shape[1:])
+    return jax.tree.map(split, batch)
+
+
 def make_train_step(cfg: ModelConfig, layout: Layout, opt_cfg: OptimConfig):
+    """One optimizer step per call, in one of three schedules derived from
+    the layout's ParallelPlan bookkeeping:
+
+      * pp == 1, microbatches == 1: the single-shot seed path.
+      * pp == 1, microbatches  > 1: ``lax.scan`` over microbatches with
+        f32 gradient accumulation.  Each microbatch is weighted by its
+        valid-token count, so the aggregate loss/gradient equals the
+        single-shot path's global token mean even when padding is spread
+        unevenly across microbatches.
+      * pp > 1: the 1F1B pipelined forward handles microbatching inside
+        ``transformer.forward`` (see core/pipeline.py); one backward pass
+        differentiates the whole schedule.
+    """
     abstract = transformer.abstract_params(cfg, layout)
     update = make_optimizer(opt_cfg, layout, param_tree=abstract)
+    m = max(layout.microbatches, 1)
+    pipelined = layout.n_stages > 1
+
+    def loss_fn(p, b):
+        loss, metrics = transformer.forward(cfg, layout, p, b, mode="train")
+        return loss, metrics
 
     def train_step(params, opt_state, batch):
-        def loss_fn(p):
-            loss, metrics = transformer.forward(cfg, layout, p, batch,
-                                                mode="train")
-            return loss, metrics
+        if pipelined or m == 1:
+            # single backward pass (the pipeline microbatches internally)
+            (loss, metrics), grads = jax.value_and_grad(
+                loss_fn, has_aux=True)(params, batch)
+        else:
+            mbs = _split_microbatches(batch, m)
+            g0 = jax.tree.map(lambda a: jnp.zeros(a.shape, jnp.float32),
+                              params)
 
-        (loss, metrics), grads = jax.value_and_grad(loss_fn, has_aux=True)(params)
+            def body(acc, mb):
+                gacc, lacc, macc, wacc = acc
+                # weight = the forward pass's loss-mask total: sum of per-mb
+                # (mean * count) over the total count reproduces the global
+                # token mean.  VLM masks vision positions but counts every
+                # text position (transformer.forward), so mirror that here.
+                if cfg.family == Family.VLM:
+                    w = jnp.float32(mb["labels"].size)
+                else:
+                    w = jnp.sum((mb["labels"] >= 0).astype(jnp.float32))
+                (l, met), g = jax.value_and_grad(
+                    loss_fn, has_aux=True)(params, mb)
+                gacc = jax.tree.map(
+                    lambda a, b: a + w * b.astype(jnp.float32), gacc, g)
+                macc = jax.tree.map(lambda a, b: a + w * b, macc, met)
+                return (gacc, lacc + w * l, macc, wacc + w), None
+
+            met0 = {"xent": jnp.zeros((), jnp.float32),
+                    "aux": jnp.zeros((), jnp.float32)}
+            if cfg.mtp:
+                met0["mtp"] = jnp.zeros((), jnp.float32)
+            (gsum, lsum, msum, wsum), _ = jax.lax.scan(
+                body, (g0, jnp.zeros((), jnp.float32), met0,
+                       jnp.zeros((), jnp.float32)), mbs)
+            wsum = jnp.maximum(wsum, 1.0)
+            loss = lsum / wsum
+            metrics = jax.tree.map(lambda a: a / wsum, msum)
+            grads = jax.tree.map(
+                lambda g, p: (g / wsum).astype(p.dtype), gsum, params)
         params2, opt_state2, opt_metrics = update(params, grads, opt_state)
         metrics = dict(metrics, loss=loss, **opt_metrics)
         return params2, opt_state2, metrics

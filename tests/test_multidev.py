@@ -86,10 +86,14 @@ for arch in ARCH_IDS:
             jnp.bfloat16)
     ref, _ = jax.jit(lambda p, b: transformer.forward(
         cfg, lay1, p, b, mode="train"))(params, batch)
+    # hybrid/ssm recurrences accumulate bf16 rounding differently across
+    # layouts (chunked scan boundaries move with the sharding), so they get
+    # a slightly looser budget than pure-attention stacks
+    tol = 5e-2 if cfg.family in (Family.HYBRID, Family.SSM) else 3e-2
     for name, lay_n in layouts.items():
         loss, _ = jax.jit(lambda p, b: transformer.forward(
             cfg, lay_n, p, b, mode="train"))(params, batch)
-        if abs(float(loss) - float(ref)) > 3e-2:
+        if abs(float(loss) - float(ref)) > tol:
             failures.append(f"{arch}@{name}: {float(loss)} vs {float(ref)}")
 
 if failures:

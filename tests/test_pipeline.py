@@ -1,0 +1,153 @@
+"""Pipeline parallelism: schedule math (fast, in-process) and the
+pp=2/microbatch=4 vs pp=1 training-equivalence battery (8 host devices via
+subprocess, same contract as tests/test_multidev.py)."""
+import os
+import subprocess
+import sys
+
+import pytest
+
+from repro.core.pipeline import bubble_fraction, pipeline_report
+from repro.core.plan import ParallelPlan
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+# ---------------------------------------------------------------------------
+# Analytic schedule model
+# ---------------------------------------------------------------------------
+def test_bubble_fraction():
+    assert bubble_fraction(1, 8) == 0.0
+    assert bubble_fraction(2, 4) == pytest.approx(0.25)
+    assert bubble_fraction(4, 8) == pytest.approx(3 / 8)
+
+
+def test_pipeline_report():
+    r = pipeline_report(2, 4)
+    assert r["ticks"] == 5
+    assert r["bubble_fraction"] == pytest.approx(0.25)
+    assert r["efficiency"] == pytest.approx(4 / 5)
+
+
+def test_plan_round_trip():
+    plan = ParallelPlan(n_model=4, cube=(1, 2, 2), n_stages=2, microbatches=4)
+    assert plan.n_devices == 8
+    assert plan.validate(n_layers=2, global_batch=8) is plan
+
+
+def test_pipeline_time_model():
+    from repro.launch.hlo_cost import pipeline_time_model
+    r = pipeline_time_model(1.0, 2, 4)
+    assert r["t_with_bubble"] == pytest.approx(1.25)
+    assert pipeline_time_model(1.0, 1, 1)["t_with_bubble"] == 1.0
+
+
+# ---------------------------------------------------------------------------
+# Training equivalence on 8 host devices
+# ---------------------------------------------------------------------------
+BATTERY = r"""
+import jax, jax.numpy as jnp
+from repro.config import OptimConfig, reduced
+from repro.configs.registry import get
+from repro.core.params import init_params
+from repro.core.plan import ParallelPlan
+from repro.models import transformer
+from repro.optim.optimizers import opt_state_abstract
+from repro.train.step import make_train_step
+
+assert len(jax.devices()) == 8, jax.devices()
+cfg = reduced(get("tinyllama-1.1b"))          # dense, 2 layers
+STEPS, B, S = 10, 8, 32
+opt_cfg = OptimConfig(lr=1e-3, warmup=2, total_steps=STEPS)
+
+plans = {
+    "pp1":      ParallelPlan(n_dp=2, n_model=4, cube=(1, 2, 2)),
+    "pp1_mb4":  ParallelPlan(n_dp=2, n_model=4, cube=(1, 2, 2),
+                             microbatches=4),
+    "pp2_mb4":  ParallelPlan(n_model=4, cube=(1, 2, 2), n_stages=2,
+                             microbatches=4),
+}
+
+def batches(step):
+    toks = jax.random.randint(jax.random.key(100 + step), (B, S), 0, cfg.vocab)
+    labs = jax.random.randint(jax.random.key(200 + step), (B, S), 0, cfg.vocab)
+    # uneven padding: the first two rows (= microbatch 0 after the (m, B/m)
+    # split) lose half their labels, so the equivalence also covers the
+    # valid-token re-weighting across microbatches
+    labs = labs.at[:2, S // 2:].set(-1)
+    return {"tokens": toks, "labels": labs}
+
+# one canonical init (pp=1 tree); the pp=2 tree is the same numbers with the
+# stacked layer dim reshaped (L, ...) -> (pp, L/pp, ...)
+lay_ref = plans["pp1"].build()
+params0 = transformer.init(cfg, lay_ref, jax.random.key(0))
+
+traj = {}
+for name, plan in plans.items():
+    plan.validate(n_layers=cfg.n_layers, global_batch=B)
+    lay = plan.build()
+    params = dict(params0)
+    if plan.n_stages > 1:
+        pp = plan.n_stages
+        params["blocks"] = jax.tree.map(
+            lambda a: a.reshape(pp, a.shape[0] // pp, *a.shape[1:]),
+            params0["blocks"])
+    opt_state = init_params(opt_state_abstract(
+        transformer.abstract_params(cfg, lay), lay, opt_cfg),
+        jax.random.key(1))
+    step_fn = jax.jit(make_train_step(cfg, lay, opt_cfg))
+    losses = []
+    for s in range(STEPS):
+        params, opt_state, met = step_fn(params, opt_state, batches(s))
+        losses.append(float(met["loss"]))
+    traj[name] = losses
+    print(name, " ".join(f"{l:.4f}" for l in losses), flush=True)
+
+failures = []
+for name in ("pp1_mb4", "pp2_mb4"):
+    diffs = [abs(a - b) for a, b in zip(traj["pp1"], traj[name])]
+    if max(diffs) > 1e-2:
+        failures.append(f"{name} max traj diff {max(diffs):.4f}")
+if failures:
+    print("FAILURES:", failures)
+    raise SystemExit(1)
+print("PP-ALL-OK")
+"""
+
+
+@pytest.mark.slow
+def test_pipeline_training_equivalence():
+    env = dict(os.environ,
+               XLA_FLAGS="--xla_force_host_platform_device_count=8",
+               PYTHONPATH=os.path.join(ROOT, "src"))
+    proc = subprocess.run([sys.executable, "-c", BATTERY], env=env,
+                          capture_output=True, text=True, timeout=3000)
+    assert proc.returncode == 0, proc.stdout[-4000:] + proc.stderr[-4000:]
+    assert "PP-ALL-OK" in proc.stdout
+
+
+# ---------------------------------------------------------------------------
+# dryrun reports the bubble term for pp>1 layouts
+# ---------------------------------------------------------------------------
+DRYRUN_SNIPPET = r"""
+import json
+from repro.launch.dryrun import lower_one
+res = lower_one("tinyllama-1.1b", "train_4k", multi_pod=False,
+                strategy="3d", compile_=False, n_pp=2, microbatches=8)
+print("RESULT " + json.dumps(res))
+"""
+
+
+@pytest.mark.slow
+def test_dryrun_reports_bubble():
+    env = dict(os.environ, PYTHONPATH=os.path.join(ROOT, "src"))
+    proc = subprocess.run([sys.executable, "-c", DRYRUN_SNIPPET], env=env,
+                          capture_output=True, text=True, timeout=3000)
+    assert proc.returncode == 0, proc.stdout[-4000:] + proc.stderr[-4000:]
+    import json
+    line = [l for l in proc.stdout.splitlines() if l.startswith("RESULT ")][0]
+    res = json.loads(line[len("RESULT "):])
+    assert res["status"] == "LOWERED", res
+    assert res["pipeline"]["bubble_fraction"] == pytest.approx(1 / 8)
+    assert res["pipeline"]["n_stages"] == 2
+    assert res["mesh"]["pp"] == 2

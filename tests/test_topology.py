@@ -1,0 +1,130 @@
+"""core/topology + core/plan edge cases: cube factorization, explicit
+overrides, and the pp axis defaulting to size 1 (backwards compatibility of
+every pre-pipeline layout)."""
+import math
+
+import pytest
+
+from repro.core.plan import ParallelPlan
+from repro.core.topology import (AXES, Layout, factor_model_axis, make_layout,
+                                 single_device_layout)
+
+
+# ---------------------------------------------------------------------------
+# factor_model_axis
+# ---------------------------------------------------------------------------
+def test_factor_2d_non_square_raises():
+    with pytest.raises(ValueError, match="square"):
+        factor_model_axis(8, "2d")
+
+
+def test_factor_2d_square():
+    assert factor_model_axis(16, "2d") == (1, 4, 4)
+
+
+def test_factor_1d():
+    assert factor_model_axis(12, "1d") == (1, 1, 12)
+
+
+def test_factor_unknown_strategy_raises():
+    with pytest.raises(ValueError, match="unknown strategy"):
+        factor_model_axis(8, "4d")
+
+
+@pytest.mark.parametrize("n,want", [
+    (16, (2, 2, 4)),
+    (24, (2, 3, 4)),
+    (64, (4, 4, 4)),
+    (8, (2, 2, 2)),
+    (1, (1, 1, 1)),
+])
+def test_factor_3d_near_cube(n, want):
+    got = factor_model_axis(n, "3d")
+    assert got == want
+    assert math.prod(got) == n
+    assert got[0] <= got[1] <= got[2]
+
+
+# ---------------------------------------------------------------------------
+# make_layout
+# ---------------------------------------------------------------------------
+def test_explicit_cube_override():
+    lay = make_layout(1, 1, 1, "3d", cube=(1, 1, 1))
+    assert lay.cube == (1, 1, 1)
+
+
+def test_pp_axis_defaults_to_one():
+    """Every pre-pipeline layout keeps working: 'pp' exists with size 1."""
+    lay = single_device_layout("3d")
+    assert "pp" in lay.sizes
+    assert lay.sizes["pp"] == 1
+    assert lay.n_stages == 1
+    assert lay.bubble_fraction() == 0.0
+    assert tuple(lay.mesh.axis_names) == AXES
+    assert len(AXES) == 6
+
+
+def test_layout_sizes_and_specs_unchanged_with_pp1():
+    from repro.core.topology import Dirs
+    lay = single_device_layout("3d")
+    d = Dirs("y", "z")
+    assert lay.n_model == 1
+    assert lay.n_data == 1
+    # specs never mention 'pp' on the pp=1 path
+    assert "pp" not in str(lay.act_spec(d.in_ax, d.out_ax))
+    assert "pp" not in str(lay.weight_spec(d.in_ax, d.out_ax))
+
+
+def test_stage_bounds():
+    lay = single_device_layout("3d")          # pp = 1
+    assert lay.stage_layers(4) == 4
+    assert lay.stage_bounds(4) == ((0, 4),)
+
+
+def test_stage_layers_divisibility():
+    plan = ParallelPlan(n_stages=2, microbatches=4)
+    with pytest.raises(ValueError, match="not divisible"):
+        plan.validate(n_layers=3)
+    plan.validate(n_layers=4)
+
+
+# ---------------------------------------------------------------------------
+# ParallelPlan
+# ---------------------------------------------------------------------------
+def test_plan_defaults_match_seed_layout():
+    plan = ParallelPlan()
+    lay = plan.build()
+    ref = single_device_layout("3d")
+    assert dict(lay.mesh.shape) == dict(ref.mesh.shape)
+    assert lay.microbatches == 1
+
+
+def test_plan_bubble_and_efficiency():
+    plan = ParallelPlan(n_stages=4, microbatches=8)
+    assert plan.bubble_fraction() == pytest.approx(3 / 8)
+    assert plan.pipeline_efficiency() == pytest.approx(8 / 11)
+    assert ParallelPlan().bubble_fraction() == 0.0
+
+
+def test_plan_validate_batch_divisibility():
+    with pytest.raises(ValueError, match="global_batch"):
+        ParallelPlan(microbatches=3).validate(global_batch=8)
+
+
+def test_plan_validate_cube_mismatch():
+    with pytest.raises(ValueError, match="cube"):
+        ParallelPlan(n_model=8, cube=(1, 2, 2)).validate()
+
+
+def test_plan_describe():
+    d = ParallelPlan(n_model=4, cube=(1, 2, 2), n_stages=2,
+                     microbatches=4).describe()
+    assert d["cube"] == "1x2x2"
+    assert d["pp"] == 2
+    assert d["bubble_fraction"] == pytest.approx(0.25)
+    assert d["devices"] == 8
+
+
+def test_plan_warns_on_dominant_bubble():
+    with pytest.warns(UserWarning, match="bubble"):
+        ParallelPlan(n_stages=4, microbatches=2).validate()
