@@ -1,6 +1,6 @@
 """Benchmark harness — one function per paper table/figure + roofline.
 
-``python -m benchmarks.run [table1|table2|comm|kernels|minirun|ppsweep|roofline|all]``
+``python -m benchmarks.run [table1|table2|comm|kernels|minirun|ppsweep|zerosweep|roofline|all]``
 
 Prints ``name,us_per_call,derived`` CSV rows per the harness contract:
 derived entries carry the model-based quantity (step time / comm bytes /
@@ -309,6 +309,83 @@ def ppsweep():
 
 
 # ---------------------------------------------------------------------------
+# ZeRO sweep: per-device optimizer bytes + step time vs zero stage, dp=4
+# ---------------------------------------------------------------------------
+ZEROSWEEP_SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import sys, time, json, math, dataclasses
+sys.path.insert(0, %(src)r)
+import jax
+from repro.config import OptimConfig, ShapeConfig, reduced
+from repro.configs.registry import get
+from repro.core.params import init_params
+from repro.core.plan import ParallelPlan
+from repro.data.pipeline import TokenStream
+from repro.models import transformer
+from repro.optim.optimizers import opt_state_abstract
+from repro.train.step import make_train_step
+
+cfg = dataclasses.replace(reduced(get("tinyllama-1.1b"), d_model=256),
+                          n_layers=4, remat=False)
+opt_cfg = OptimConfig(lr=1e-3, warmup=2, total_steps=10)
+
+def device0_bytes(tree):
+    # bytes of the shard device 0 actually stores (after the jitted step
+    # has placed the state per its constraints)
+    total = 0
+    for leaf in jax.tree.leaves(tree):
+        sh = leaf.sharding.shard_shape(leaf.shape)
+        total += math.prod(sh) * leaf.dtype.itemsize
+    return total
+
+out = {}
+for zero in (0, 1, 2):
+    plan = ParallelPlan(n_dp=4, n_model=2, cube=(1, 1, 2), microbatches=2,
+                        zero_stage=zero)
+    plan.validate(n_layers=cfg.n_layers, global_batch=16)
+    lay = plan.build()
+    params = transformer.init(cfg, lay, jax.random.key(0))
+    opt_state = init_params(opt_state_abstract(
+        transformer.abstract_params(cfg, lay), lay, opt_cfg),
+        jax.random.key(1))
+    shape = ShapeConfig("z", 128, 16, "train")
+    batch = next(iter(TokenStream(cfg, lay, shape)))
+    step = jax.jit(make_train_step(cfg, lay, opt_cfg))
+    p2, o2, m = step(params, opt_state, batch)
+    jax.block_until_ready(m["loss"])
+    t0 = time.perf_counter()
+    for _ in range(3):
+        p2, o2, m = step(p2, o2, batch)
+        jax.block_until_ready(m["loss"])
+    out[f"zero{zero}"] = {"t_step": (time.perf_counter() - t0) / 3,
+                          "opt_bytes_dev0": device0_bytes((o2.m, o2.v)),
+                          "loss": float(m["loss"])}
+print("RESULT " + json.dumps(out))
+"""
+
+
+def zerosweep():
+    env = dict(os.environ, PYTHONPATH=os.path.join(ROOT, "src"))
+    proc = subprocess.run(
+        [sys.executable, "-c", ZEROSWEEP_SCRIPT % {"src": os.path.join(ROOT, "src")}],
+        env=env, capture_output=True, text=True, timeout=3000)
+    for line in proc.stdout.splitlines():
+        if line.startswith("RESULT "):
+            res = json.loads(line[len("RESULT "):])
+            base = res.get("zero0", {}).get("opt_bytes_dev0")
+            for name, r in res.items():
+                saved = f" saved={base/r['opt_bytes_dev0']:.2f}x" if base else ""
+                _row(f"zerosweep_train_step|{name}|dp4|8hostdev",
+                     f"{r['t_step']*1e6:.0f}",
+                     f"opt_bytes_dev0={r['opt_bytes_dev0']}"
+                     f"{saved} loss={r['loss']:.4f}")
+            return
+    print(proc.stderr[-2000:], file=sys.stderr)
+    _row("zerosweep", "", "FAILED")
+
+
+# ---------------------------------------------------------------------------
 # Roofline from the dry-run results
 # ---------------------------------------------------------------------------
 def roofline(path=None):
@@ -337,6 +414,8 @@ def main() -> None:
         minirun()
     if which in ("ppsweep", "all"):
         ppsweep()
+    if which in ("zerosweep", "all"):
+        zerosweep()
     if which in ("roofline", "all"):
         roofline()
 

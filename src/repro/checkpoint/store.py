@@ -3,6 +3,18 @@
 Arrays are fetched shard-by-shard (addressable shards only) so saving works
 the same on one host or many; restore re-places each leaf with its layout
 sharding.  No external deps (tensorstore-free).
+
+Resharding contract: what goes to disk is always the *global* value of each
+leaf — ZeRO/dp/cube sharding changes placement, never global shape — so a
+checkpoint is layout-independent.  Restoring under a different ``dp`` size
+or ``zero_stage`` (e.g. a dp=2/zero=1 run restored onto dp=4) only changes
+which slice of each leaf lands on which device: pass templates built for
+the *target* layout (abstract ``Param`` trees from
+``transformer.abstract_params`` / ``opt_state_abstract``, or materialized
+arrays) and every leaf is ``device_put`` with the target sharding.  A
+global-shape mismatch therefore always means the model or cube definition
+changed, and restore fails loudly instead of mis-slicing.  ``save`` records
+the source mesh and zero stage in ``index.json`` for post-mortems.
 """
 from __future__ import annotations
 
@@ -26,10 +38,14 @@ def _leaf_paths(tree) -> Dict[str, Any]:
     return out
 
 
-def save(ckpt_dir: str, step: int, params, opt_state=None, extra=None):
+def save(ckpt_dir: str, step: int, params, opt_state=None, extra=None,
+         layout: Layout = None):
     d = os.path.join(ckpt_dir, f"step_{step:08d}")
     os.makedirs(d, exist_ok=True)
     index = {"step": step, "leaves": {}}
+    if layout is not None:
+        index["meta"] = {"mesh": {k: int(v) for k, v in layout.sizes.items()},
+                         "zero_stage": layout.effective_zero_stage()}
     trees = {"params": params}
     if opt_state is not None:
         trees["opt"] = opt_state
@@ -78,6 +94,14 @@ def restore(ckpt_dir: str, step: int, params_template, layout: Layout,
             arr = np.load(os.path.join(d, entry["file"]))
             if entry["dtype"] == "bfloat16":
                 arr = arr.view(jax.numpy.bfloat16.dtype)
+            want = tuple(getattr(leaf, "shape", arr.shape))
+            if tuple(arr.shape) != want:
+                raise ValueError(
+                    f"checkpoint leaf {prefix}/{key}: stored global shape "
+                    f"{tuple(arr.shape)} != template {want}. Checkpoints are "
+                    "layout-independent (dp/zero resharding changes placement"
+                    " only), so a shape mismatch means the model config or "
+                    "cube changed, not the parallel plan.")
             if is_param(leaf):
                 sharding = layout.sharding(leaf.spec)
             elif hasattr(leaf, "sharding"):

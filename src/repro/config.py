@@ -181,7 +181,9 @@ class OptimConfig:
     eps: float = 1e-8
     weight_decay: float = 0.1
     clip_norm: float = 1.0
-    zero1: bool = True              # shard optimizer state over dp
+    # NOTE: optimizer-state partitioning is no longer configured here — it is
+    # a *plan* property (ParallelPlan.zero_stage -> Layout.zero_stage), so
+    # the memory model, train step and checkpoints all see one knob.
 
 
 @dataclasses.dataclass(frozen=True)

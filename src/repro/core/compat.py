@@ -37,6 +37,19 @@ def make_mesh(shape, axes):
     return jax.make_mesh(shape, axes, **auto_axis_types(len(axes)))
 
 
+def sharding_constraint(x, sharding):
+    """GSPMD placement hint, version-stable entry point.
+
+    This is the ZeRO collective primitive in this codebase: constraining a
+    dp-replicated gradient to a dp-extended spec lowers the dp all-reduce
+    into reduce-scatter (each replica receives only its 1/dp shard), and
+    constraining the updated parameter back to its own spec lowers into the
+    all-gather that rebuilds the full value.  Routed through compat so a
+    future jax relocation touches one line.
+    """
+    return jax.lax.with_sharding_constraint(x, sharding)
+
+
 def tpu_compiler_params(**kw):
     """pltpu.CompilerParams (new) / pltpu.TPUCompilerParams (old jax)."""
     from jax.experimental.pallas import tpu as pltpu

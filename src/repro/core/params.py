@@ -93,6 +93,21 @@ def param_bytes(tree) -> int:
                for p in jax.tree.leaves(tree, is_leaf=is_param))
 
 
+def sharded_bytes(tree, layout: Layout) -> int:
+    """Per-device bytes of a Param tree under its specs: each leaf's global
+    byte count divided by the product of the mesh-axis sizes its spec names
+    (the dry-run memory model; assumes even divisibility, rounding up)."""
+    total = 0
+    for p in jax.tree.leaves(tree, is_leaf=is_param):
+        shards = 1
+        for entry in (p.spec or ()):
+            for ax in (entry if isinstance(entry, (tuple, list)) else (entry,)):
+                if ax:
+                    shards *= layout.size(ax)
+        total += -(-p.size // shards) * np.dtype(p.dtype).itemsize
+    return total
+
+
 def stack(p: Param, n: int, shard: Optional[str] = None) -> Param:
     """Stack a Param for scan-over-layers: prepend the layer dim.
 

@@ -26,6 +26,21 @@ Design (composes with the paper's 3-D cube, Megatron-style — arXiv
 
 Inside a stage every linear still runs the paper's direction-exchange 3-D
 algorithm — the shard_map islands vmap cleanly over the stage dim.
+
+Sharding contract:
+
+  * entry:  block parameters arrive stacked as (pp, layers_per_stage, ...)
+    with dim 0 sharded over 'pp' and the trailing dims on the paper's
+    weight specs (out_ax, (in_ax, 'x')).  Embedding / head tables arrive
+    replicated along 'pp' (cube-sharded as usual).
+  * inside: the pipeline state buffer is (pp, B_mb, S, H) with dim 0 on
+    'pp' and the rest on the activation spec; ``shift_stages`` is the only
+    place activations cross the 'pp' axis (ppermute), and it preserves the
+    spec.
+  * exit:   per-microbatch losses leave replicated over 'pp' (every stage
+    group holds the scalar); gradients inherit the parameter specs above —
+    optimizer-state placement on top of them (ZeRO over dp) is the
+    optimizer's business, not the pipeline's.
 """
 from __future__ import annotations
 

@@ -11,11 +11,24 @@ full composition:
 yields a 6-axis Layout; everything downstream (models, train step, launch,
 dry-run) derives its behaviour from that Layout:
 
-  * dp / pod          -> data parallelism (batch sharding, ZeRO-1 opt state)
+  * dp / pod          -> data parallelism (batch sharding)
   * (x, y, z) cube    -> the paper's 3-D tensor parallelism inside a stage
   * pp                -> contiguous pipeline stages over the layer stack
   * microbatches      -> gradient accumulation; with pp > 1 this is the
                          pipeline's m, bubble fraction = (pp-1)/m
+  * zero_stage        -> ZeRO partitioning of the optimizer state over the
+                         data axes: 0 replicates Adam m/v on every dp
+                         replica, 1 shards them 1/dp (grads reduce-scatter
+                         onto the shard, fresh params all-gather back), 2
+                         additionally keeps the f32 grad-accumulation
+                         buffer dp-sharded.  ``None`` (default) resolves to
+                         1 when the data degree > 1, else 0.
+
+Sharding contract: a plan is pure bookkeeping — ``build()`` returns the
+Layout whose specs (see core/topology.py) govern placement; nothing here
+touches arrays.  ``zero_stage`` is carried on the Layout and consumed by
+``optim/optimizers.py`` (state placement), ``train/step.py`` (grad-buffer
+placement) and ``launch/dryrun.py`` (memory model).
 """
 from __future__ import annotations
 
@@ -38,11 +51,26 @@ class ParallelPlan:
     batch_axes: Tuple[str, ...] = ("pod", "dp", "x")
     seq_axes: Tuple[str, ...] = ()
     gspmd_linears: bool = False
+    # ZeRO optimizer-state partitioning over (pod, dp).  None = auto:
+    # stage 1 when the data degree > 1, else 0.  Explicit values are
+    # validated (0..2; >0 requires a data degree to shard over).
+    zero_stage: Optional[int] = None
 
     # ---- derived ----
     @property
     def n_devices(self) -> int:
         return self.n_pod * self.n_dp * self.n_stages * self.n_model
+
+    @property
+    def n_data(self) -> int:
+        return self.n_pod * self.n_dp
+
+    @property
+    def resolved_zero_stage(self) -> int:
+        """The ZeRO stage the plan will actually run (auto -> 1 iff dp>1)."""
+        if self.zero_stage is None:
+            return 1 if self.n_data > 1 else 0
+        return self.zero_stage
 
     @property
     def cube_dims(self) -> Tuple[int, int, int]:
@@ -79,6 +107,17 @@ class ParallelPlan:
         px, py, pz = self.cube_dims
         if px * py * pz != self.n_model:
             raise ValueError(f"cube {self.cube_dims} != n_model {self.n_model}")
+        if self.zero_stage is not None:
+            if self.zero_stage not in (0, 1, 2):
+                raise ValueError(
+                    f"zero_stage={self.zero_stage} not in (0, 1, 2): 0 = "
+                    "replicated opt state, 1 = sharded m/v, 2 = + sharded "
+                    "grad accumulation (ZeRO-3 param sharding not supported)")
+            if self.zero_stage > 0 and self.n_data == 1:
+                raise ValueError(
+                    f"zero_stage={self.zero_stage} requires a data-parallel "
+                    f"degree > 1 to shard over, got pod*dp={self.n_data}; "
+                    "grow --dp or drop --zero")
         return self
 
     # ---- materialization ----
@@ -88,7 +127,8 @@ class ParallelPlan:
             strategy=self.strategy, cube=self.cube,
             batch_axes=self.batch_axes, seq_axes=self.seq_axes,
             devices=devices, gspmd_linears=self.gspmd_linears,
-            n_pp=self.n_stages, microbatches=self.microbatches)
+            n_pp=self.n_stages, microbatches=self.microbatches,
+            zero_stage=self.resolved_zero_stage)
 
     def describe(self) -> dict:
         px, py, pz = self.cube_dims
@@ -101,4 +141,5 @@ class ParallelPlan:
             "bubble_fraction": round(self.bubble_fraction(), 4),
             "pipeline_efficiency": round(self.pipeline_efficiency(), 4),
             "strategy": self.strategy,
+            "zero_stage": self.resolved_zero_stage,
         }

@@ -21,6 +21,15 @@ with in_ax/out_ax alternating between 'y' and 'z' after every linear layer,
 while weights stay attached to 'x':
 
     W  : (H, F)     sharded  (out_ax, (in_ax, 'x'))
+
+Sharding contract of this module: a ``Layout`` only *names* placements — it
+never moves data.  Every spec it hands out (``act_spec``, ``weight_spec``,
+``batch_spec``) refers to the 6-axis mesh above; arrays entering a function
+with one of these specs leave it with the same spec unless the function's
+own docstring says otherwise.  Optimizer state is NOT covered by these
+specs: its placement additionally extends the parameter spec with the data
+axes per ``Layout.zero_stage`` (see ``optim/optimizers.py`` for that
+contract).
 """
 from __future__ import annotations
 
@@ -77,6 +86,13 @@ class Layout:
     # gradient-accumulation microbatches per optimizer step (schedule
     # bookkeeping; with pp > 1 this is the pipeline's m, bubble = (pp-1)/m)
     microbatches: int = 1
+    # ZeRO stage for optimizer-state partitioning over the data axes
+    # (pod, dp): 0 = fully replicated opt state, 1 = Adam m/v (and the f32
+    # master update) sharded 1/dp per replica, 2 = additionally keep the
+    # gradient-accumulation buffer reduce-scattered over dp.  Inert when the
+    # data degree is 1 (see effective_zero_stage).  Default 1 preserves the
+    # historical behaviour of sharding moments whenever dp > 1.
+    zero_stage: int = 1
 
     # ---- sizes ----
     @property
@@ -128,6 +144,11 @@ class Layout:
     def bubble_fraction(self) -> float:
         """1F1B / GPipe pipeline bubble (pp-1)/m as a fraction of ideal time."""
         return bubble_fraction(self.n_stages, self.microbatches)
+
+    def effective_zero_stage(self) -> int:
+        """ZeRO stage actually in force: the configured stage, degraded to 0
+        when there is nothing to partition (data degree pod*dp == 1)."""
+        return self.zero_stage if self.n_data > 1 else 0
 
     # ---- specs ----
     def batch_spec(self):
@@ -213,11 +234,12 @@ def make_mesh(n_pod: int = 1, n_dp: int = 1, n_model: int = 1,
 
 def make_layout(n_pod=1, n_dp=1, n_model=1, strategy="3d", cube=None,
                 batch_axes=("pod", "dp", "x"), seq_axes=(), devices=None,
-                gspmd_linears=False, n_pp=1, microbatches=1) -> Layout:
+                gspmd_linears=False, n_pp=1, microbatches=1,
+                zero_stage=1) -> Layout:
     mesh = make_mesh(n_pod, n_dp, n_model, strategy, cube, devices, n_pp)
     return Layout(mesh=mesh, strategy=strategy, gspmd_linears=gspmd_linears,
                   batch_axes=tuple(batch_axes), seq_axes=tuple(seq_axes),
-                  microbatches=microbatches)
+                  microbatches=microbatches, zero_stage=zero_stage)
 
 
 def single_device_layout(strategy: str = "3d") -> Layout:

@@ -89,12 +89,13 @@ def collective_stats(hlo: str):
 
 
 def build_layout(arch: str, shape_name: str, multi_pod: bool, strategy: str,
-                 n_pp: int = 1, microbatches: int = 1):
+                 n_pp: int = 1, microbatches: int = 1, zero_stage: int = 1):
     args = shape_layout_args(shape_name, multi_pod)
     cube = cube_for(arch, 16, strategy)
     lay = make_framework_layout(multi_pod=multi_pod, strategy=strategy,
                                 cube=cube, n_pp=n_pp,
-                                microbatches=microbatches, **args)
+                                microbatches=microbatches,
+                                zero_stage=zero_stage, **args)
     # drop batch axes that exceed the global batch
     shape = SHAPES[shape_name]
     bax = []
@@ -107,9 +108,62 @@ def build_layout(arch: str, shape_name: str, multi_pod: bool, strategy: str,
     return dataclasses.replace(lay, batch_axes=tuple(bax))
 
 
+def memory_model(cfg, layout, shape, opt_cfg):
+    """Analytic per-device memory breakdown under the layout's specs.
+
+    Reports param, grad, optimizer, and activation bytes as separate
+    components (the optimizer line was previously missing entirely), plus
+    the replicated-optimizer baseline so the ZeRO savings are visible:
+
+      * params      — model weights, sharded per their own specs.
+      * grads       — the f32 accumulation buffer when microbatching (param
+                      dtype otherwise); dp-sharded under zero_stage >= 2.
+      * opt         — Adam m/v (f32) or Adafactor stats, dp-sharded under
+                      zero_stage >= 1 (~1/dp of the replicated baseline).
+      * act (est.)  — one (B_mb, S, H) residual per resident layer, bf16; a
+                      rough lower bound (remat keeps ~1 checkpoint/block).
+    """
+    import dataclasses as _dc
+    import math as _math
+    from repro.core.params import sharded_bytes, tree_map_params
+    from repro.optim.optimizers import zero_partition_spec
+
+    abstract = transformer.abstract_params(cfg, layout)
+    zs = layout.effective_zero_stage()
+    m = max(layout.microbatches, 1)
+    param_b = sharded_bytes(abstract, layout)
+
+    def grad_param(p):
+        spec = zero_partition_spec(p, layout) if zs >= 2 else p.spec
+        return _dc.replace(p, spec=spec,
+                           dtype="float32" if m > 1 else p.dtype)
+    grad_b = sharded_bytes(tree_map_params(grad_param, abstract), layout)
+    opt_b = sharded_bytes(opt_state_abstract(abstract, layout, opt_cfg),
+                          layout)
+    lay0 = _dc.replace(layout, zero_stage=0)
+    opt_b0 = sharded_bytes(opt_state_abstract(abstract, lay0, opt_cfg), lay0)
+    bsh = _math.prod(layout.size(a) for a in layout.batch_axes) or 1
+    ssh = _math.prod(layout.size(a) for a in layout.seq_axes) \
+        * layout.size("y")
+    act_b = int((cfg.n_layers / layout.n_stages)
+                * max(shape.global_batch / m / bsh, 1)
+                * (shape.seq_len / ssh) * (cfg.d_model / layout.size("z"))
+                * 2)
+    return {
+        "zero_stage": zs,
+        "param_gib": param_b / 2**30,
+        "grad_gib": grad_b / 2**30,
+        "opt_gib": opt_b / 2**30,
+        "opt_replicated_gib": opt_b0 / 2**30,
+        "opt_savings_x": round(opt_b0 / max(opt_b, 1), 2),
+        "act_est_gib": act_b / 2**30,
+    }
+
+
 def lower_one(arch: str, shape_name: str, *, multi_pod: bool,
               strategy: str = "3d", compile_: bool = True,
-              force_window: int = 0, n_pp: int = 1, microbatches: int = 1):
+              force_window: int = 0, n_pp: int = 1, microbatches: int = 1,
+              zero_stage: int = 1):
     cfg = get(arch)
     if force_window and not cfg.window:
         # sliding-window VARIANT of a full-attention arch: makes long_500k
@@ -134,7 +188,7 @@ def lower_one(arch: str, shape_name: str, *, multi_pod: bool,
                 "status": "SKIP",
                 "reason": f"pp={n_pp} needs a dense arch with divisible depth"}
     layout = build_layout(arch, shape_name, multi_pod, strategy, n_pp,
-                          microbatches)
+                          microbatches, zero_stage)
     specs = transformer.input_specs(cfg, layout, shape)
     params = abstract_arrays(transformer.abstract_params(cfg, layout), layout)
 
@@ -162,6 +216,8 @@ def lower_one(arch: str, shape_name: str, *, multi_pod: bool,
     if n_pp > 1:
         from repro.core.pipeline import pipeline_report
         res["pipeline"] = pipeline_report(n_pp, microbatches)
+    if shape.kind == "train":
+        res["memory_model"] = memory_model(cfg, layout, shape, opt_cfg)
     if not compile_:
         return res
 
@@ -207,6 +263,10 @@ def main():
                     help="pipeline microbatches m (bubble = (pp-1)/m); "
                          "default: 8 when --pp > 1, else 1 (the seed's "
                          "single-shot train step)")
+    ap.add_argument("--zero", type=int, default=-1, choices=[-1, 0, 1, 2],
+                    help="ZeRO stage for the optimizer-state memory model "
+                         "and lowering (0 replicated, 1 sharded m/v, 2 + "
+                         "sharded grad accumulation); default: auto (1)")
     ap.add_argument("--lower-only", action="store_true")
     ap.add_argument("--force-window", type=int, default=0,
                     help="run a sliding-window VARIANT of full-attention archs")
@@ -235,13 +295,17 @@ def main():
                 tag = f"{arch} x {shape} x {'2pod' if mp else '1pod'} [{args.strategy}]"
                 if args.pp > 1:
                     tag += f" pp={args.pp} m={args.microbatch}"
+                if args.zero >= 0:
+                    tag += f" zero={args.zero}"
                 try:
                     res = lower_one(arch, shape, multi_pod=mp,
                                     strategy=args.strategy,
                                     compile_=not args.lower_only,
                                     force_window=args.force_window,
                                     n_pp=args.pp,
-                                    microbatches=args.microbatch)
+                                    microbatches=args.microbatch,
+                                    zero_stage=1 if args.zero < 0
+                                    else args.zero)
                 except Exception as e:
                     traceback.print_exc()
                     res = {"arch": arch, "shape": shape, "multi_pod": mp,
@@ -261,6 +325,20 @@ def main():
                 elif res["status"] == "SKIP":
                     line += f" ({res['reason']})"
                 print(line, flush=True)
+                if "memory_model" in res:
+                    mm = res["memory_model"]
+                    for part, key in (("params", "param_gib"),
+                                      ("grads", "grad_gib"),
+                                      ("opt", "opt_gib"),
+                                      ("act(est)", "act_est_gib")):
+                        note = ""
+                        if part == "opt":
+                            rep = mm["opt_replicated_gib"]
+                            note = (f"  [replicated {rep:.3f} GiB -> "
+                                    f"{mm['opt_savings_x']}x saved, "
+                                    f"zero={mm['zero_stage']}]")
+                        print(f"    mem/device {part:8s} "
+                              f"{mm[key]:9.3f} GiB{note}", flush=True)
                 if args.out:
                     with open(args.out, "a") as f:
                         f.write(json.dumps(res) + "\n")

@@ -25,7 +25,8 @@ def make_framework_layout(*, multi_pod: bool = False, strategy: str = "3d",
                           cube: Optional[Tuple[int, int, int]] = None,
                           batch_axes=("pod", "dp", "x"), seq_axes=(),
                           n_dp: int = 16, n_model: int = 16,
-                          n_pp: int = 1, microbatches: int = 1) -> Layout:
+                          n_pp: int = 1, microbatches: int = 1,
+                          zero_stage: int = 1) -> Layout:
     """6-axis layout over the production devices (same device order as the
     prescribed mesh: row-major over (pod, data, model)).  With n_pp > 1 the
     pipeline axis is carved out of the data axis (n_dp must divide by it)."""
@@ -38,7 +39,8 @@ def make_framework_layout(*, multi_pod: bool = False, strategy: str = "3d",
     return make_layout(n_pod=2 if multi_pod else 1, n_dp=n_dp,
                        n_model=n_model, strategy=strategy, cube=cube,
                        batch_axes=batch_axes, seq_axes=seq_axes,
-                       devices=devices, n_pp=n_pp, microbatches=microbatches)
+                       devices=devices, n_pp=n_pp, microbatches=microbatches,
+                       zero_stage=zero_stage)
 
 
 def shape_layout_args(shape_name: str, multi_pod: bool):

@@ -28,6 +28,11 @@ def main(argv=None):
     ap.add_argument("--microbatch", type=int, default=1,
                     help="gradient-accumulation microbatches per step "
                          "(the pipeline's m when --pp > 1)")
+    ap.add_argument("--zero", type=int, default=-1,
+                    help="ZeRO stage for optimizer-state sharding over dp: "
+                         "0 = replicated, 1 = shard Adam m/v 1/dp, 2 = also "
+                         "keep the grad-accumulation buffer dp-sharded; "
+                         "default: auto (1 when --dp > 1, else 0)")
     ap.add_argument("--reduced", action="store_true",
                     help="use the smoke-test reduced variant")
     ap.add_argument("--layers", type=int, default=0)
@@ -73,7 +78,8 @@ def main(argv=None):
 
     plan = ParallelPlan(n_dp=args.dp, n_model=args.model,
                         strategy=args.strategy, n_stages=args.pp,
-                        microbatches=args.microbatch)
+                        microbatches=args.microbatch,
+                        zero_stage=None if args.zero < 0 else args.zero)
     plan.validate(n_layers=cfg.n_layers, global_batch=args.batch)
     layout = plan.build()
     shape = ShapeConfig("cli", args.seq, args.batch, "train")
@@ -121,7 +127,8 @@ def main(argv=None):
                   f"gnorm={float(metrics['gnorm']):7.3f} "
                   f"{dt:6.2f}s/step", flush=True)
         if args.ckpt_dir and args.ckpt_every and (step + 1) % args.ckpt_every == 0:
-            d = store.save(args.ckpt_dir, step + 1, params, opt_state)
+            d = store.save(args.ckpt_dir, step + 1, params, opt_state,
+                           layout=layout)
             print(f"saved {d}")
     if losses:
         print(f"done: first loss {losses[0]:.4f} -> last {losses[-1]:.4f}")

@@ -1,2 +1,3 @@
 from .optimizers import (OptState, adamw_init, adafactor_init, make_optimizer,
-                         make_schedule, clip_by_global_norm, opt_state_abstract)
+                         make_schedule, clip_by_global_norm,
+                         opt_state_abstract, zero_partition_spec)

@@ -1,8 +1,33 @@
 """Optimizers (own implementation — no optax dependency).
 
-AdamW with ZeRO-1 state sharding (moments sharded over 'dp' on top of the
-parameter's own sharding) and Adafactor (factored second moment, no first
-moment) for the parameter-heavy MoE archs where full Adam state cannot fit.
+AdamW with ZeRO-style distributed state partitioning and Adafactor
+(factored second moment, no first moment) for the parameter-heavy MoE
+archs where full Adam state cannot fit.
+
+Sharding contract (driven by ``Layout.zero_stage``, set via
+``ParallelPlan.zero_stage``):
+
+  * entry:  ``params`` and ``grads`` arrive with the *parameter* specs from
+    the model (cube/pp-sharded, replicated over the data axes).  Gradients
+    have already been summed over dp by the backward pass.
+  * state:  with ``effective_zero_stage() >= 1`` each Adam moment (and the
+    f32 update temporaries) lives under ``zero_partition_spec`` — the
+    parameter's own spec *extended by the data axes* ('pod', 'dp') on the
+    largest evenly-divisible dim, so each data replica stores and updates
+    a 1/(pod*dp) shard.  Gradients are
+    reduce-scattered onto that shard (a GSPMD constraint, see
+    ``core.compat.sharding_constraint``) before the elementwise update.
+    With stage 0 the state simply mirrors the parameter specs (replicated
+    over dp).  A dim divisible by neither stays on the parameter spec
+    (falls back to replication for that leaf).
+  * exit:   updated parameters are constrained back to the parameter specs
+    — the all-gather that rebuilds the full value on every replica — and
+    the new moments stay on their ZeRO shard.  Optimizer state therefore
+    NEVER round-trips through the replicated layout.
+
+Adafactor's factored row/col stats are O(sum of dims), not O(params); they
+stay on the parameter-derived specs at every stage (sharding them over dp
+would save little and complicate the factored update).
 """
 from __future__ import annotations
 
@@ -58,42 +83,53 @@ def clip_by_global_norm(grads, max_norm: float):
 
 
 # ---------------------------------------------------------------------------
-# state spec helpers (ZeRO-1: extend the param spec with 'dp' when possible)
+# state spec helpers (ZeRO: extend the param spec with 'dp' when possible)
 # ---------------------------------------------------------------------------
-def _zero1_spec(p: Param, layout: Layout) -> P:
+def zero_partition_spec(p: Param, layout: Layout) -> P:
+    """The ZeRO shard spec for one parameter's optimizer state: the param's
+    own spec with the data axes ('pod', 'dp'; sizes > 1 only) attached to
+    the largest dim they divide evenly — so the state shards over the full
+    data degree pod*dp that plan validation and the memory model promise.
+    Returns the unmodified param spec when the data degree is 1, when the
+    spec already uses a data axis, or when no dim divides (that leaf stays
+    replicated)."""
     spec = tuple(p.spec) if p.spec is not None else (None,) * len(p.shape)
     spec = list(spec) + [None] * (len(p.shape) - len(spec))
-    dp = layout.size("dp")
-    if dp <= 1:
+    data_axes = tuple(a for a in ("pod", "dp") if layout.size(a) > 1)
+    d = math.prod(layout.size(a) for a in data_axes)
+    if d <= 1:
         return p.spec
     used = set()
     for e in spec:
         for a in (e if isinstance(e, (tuple, list)) else (e,)):
             if a:
                 used.add(a)
-    if "dp" in used:
+    if used.intersection(data_axes):
         return p.spec
-    # attach dp to the largest evenly-divisible dim
+    # attach the data axes to the largest evenly-divisible dim
     order = sorted(range(len(p.shape)), key=lambda i: -p.shape[i])
     for i in order:
         e = spec[i]
         cur = math.prod(layout.size(a) for a in
                         ((e,) if isinstance(e, str) else (e or ())))
-        if p.shape[i] % (cur * dp) == 0:
+        if p.shape[i] % (cur * d) == 0:
             if e is None:
-                spec[i] = "dp"
+                spec[i] = data_axes if len(data_axes) > 1 else data_axes[0]
             elif isinstance(e, str):
-                spec[i] = (e, "dp")
+                spec[i] = (e, *data_axes)
             else:
-                spec[i] = tuple(e) + ("dp",)
+                spec[i] = tuple(e) + data_axes
             return P(*spec)
     return p.spec
 
 
 def opt_state_abstract(param_tree, layout: Layout, cfg: OptimConfig):
-    """Abstract Param tree for the optimizer state (for dry-runs)."""
+    """Abstract Param tree for the optimizer state (for dry-runs and as a
+    checkpoint-restore template; specs follow the layout's ZeRO stage)."""
+    zero = layout.effective_zero_stage() >= 1
+
     def moment(p: Param):
-        spec = _zero1_spec(p, layout) if cfg.zero1 else p.spec
+        spec = zero_partition_spec(p, layout) if zero else p.spec
         return Param(p.shape, spec, dtype=F32, init="zeros")
 
     if cfg.name == "adafactor":
@@ -148,22 +184,25 @@ def _scanned_update(p, args, one):
 
 
 def make_optimizer(cfg: OptimConfig, layout: Layout, param_tree=None):
-    """param_tree (abstract Params) enables ZeRO-1 sharding constraints:
-    the moment update is computed on the dp-sharded view (grads arrive via an
-    implicit reduce-scatter) and only the updated parameter is re-gathered."""
+    """param_tree (abstract Params) enables the ZeRO update path: the moment
+    update is computed on the dp-sharded view (grads arrive via a GSPMD
+    reduce-scatter), the new moments stay on their shard, and only the
+    updated parameter is re-gathered (see the module docstring contract)."""
+    from ..core.compat import sharding_constraint
     sched = make_schedule(cfg)
     zspecs = None
-    if param_tree is not None and cfg.zero1 and layout.size("dp") > 1:
+    if param_tree is not None and layout.effective_zero_stage() >= 1:
         from ..core.params import tree_map_params
-        zspecs = tree_map_params(lambda p: _zero1_spec(p, layout), param_tree)
+        zspecs = tree_map_params(
+            lambda p: zero_partition_spec(p, layout), param_tree)
 
     def _z(tree):
         if zspecs is None:
             return tree
         import jax as _jax
         return _jax.tree.map(
-            lambda a, sp: _jax.lax.with_sharding_constraint(
-                a, layout.sharding(sp)), tree, zspecs)
+            lambda a, sp: sharding_constraint(a, layout.sharding(sp)),
+            tree, zspecs)
 
     def adamw_update(params, grads, state: OptState):
         step = state.step + 1
@@ -196,12 +235,16 @@ def make_optimizer(cfg: OptimConfig, layout: Layout, param_tree=None):
                              is_leaf=lambda x: isinstance(x, tuple))
         new_v = jax.tree.map(lambda t: t[2], out,
                              is_leaf=lambda x: isinstance(x, tuple))
+        # the moments stay on their ZeRO shard across steps; only the
+        # parameter is all-gathered back to its own (dp-replicated) spec
+        new_m = _z(new_m)
+        new_v = _z(new_v)
         if param_tree is not None:
             from ..core.params import tree_map_params
             pspecs = tree_map_params(lambda p: p.spec, param_tree)
             new_p = jax.tree.map(
-                lambda a, sp: jax.lax.with_sharding_constraint(
-                    a, layout.sharding(sp)), new_p, pspecs)
+                lambda a, sp: sharding_constraint(a, layout.sharding(sp)),
+                new_p, pspecs)
         return new_p, OptState(step, new_m, new_v), {"lr": lr, "gnorm": gnorm}
 
     def adafactor_update(params, grads, state: OptState):

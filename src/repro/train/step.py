@@ -41,11 +41,31 @@ def make_train_step(cfg: ModelConfig, layout: Layout, opt_cfg: OptimConfig):
       * pp > 1: the 1F1B pipelined forward handles microbatching inside
         ``transformer.forward`` (see core/pipeline.py); one backward pass
         differentiates the whole schedule.
+
+    With ``layout.effective_zero_stage() >= 2`` the f32 accumulation buffer
+    is additionally kept on the ZeRO shard specs (reduce-scattered over dp
+    every microbatch), so per-device gradient memory is 1/dp of the
+    parameter count instead of a full replica — the optimizer then updates
+    its state shard without any further gradient movement.
     """
     abstract = transformer.abstract_params(cfg, layout)
     update = make_optimizer(opt_cfg, layout, param_tree=abstract)
     m = max(layout.microbatches, 1)
     pipelined = layout.n_stages > 1
+
+    zshards = None
+    if layout.effective_zero_stage() >= 2:
+        from ..core.params import tree_map_params
+        from ..optim.optimizers import zero_partition_spec
+        zshards = tree_map_params(
+            lambda p: layout.sharding(zero_partition_spec(p, layout)),
+            abstract)
+
+    def _scatter(gtree):
+        if zshards is None:
+            return gtree
+        from ..core.compat import sharding_constraint
+        return jax.tree.map(sharding_constraint, gtree, zshards)
 
     def loss_fn(p, b):
         loss, metrics = transformer.forward(cfg, layout, p, b, mode="train")
@@ -56,10 +76,11 @@ def make_train_step(cfg: ModelConfig, layout: Layout, opt_cfg: OptimConfig):
             # single backward pass (the pipeline microbatches internally)
             (loss, metrics), grads = jax.value_and_grad(
                 loss_fn, has_aux=True)(params, batch)
+            grads = _scatter(grads)
         else:
             mbs = _split_microbatches(batch, m)
-            g0 = jax.tree.map(lambda a: jnp.zeros(a.shape, jnp.float32),
-                              params)
+            g0 = _scatter(jax.tree.map(
+                lambda a: jnp.zeros(a.shape, jnp.float32), params))
 
             def body(acc, mb):
                 gacc, lacc, macc, wacc = acc
@@ -73,8 +94,10 @@ def make_train_step(cfg: ModelConfig, layout: Layout, opt_cfg: OptimConfig):
                     w = jnp.sum((mb["labels"] >= 0).astype(jnp.float32))
                 (l, met), g = jax.value_and_grad(
                     loss_fn, has_aux=True)(params, mb)
-                gacc = jax.tree.map(
-                    lambda a, b: a + w * b.astype(jnp.float32), gacc, g)
+                # ZeRO-2: each microbatch's grads reduce-scatter onto the dp
+                # shard before accumulation, so gacc never fully materializes
+                gacc = _scatter(jax.tree.map(
+                    lambda a, b: a + w * b.astype(jnp.float32), gacc, g))
                 macc = jax.tree.map(lambda a, b: a + w * b, macc, met)
                 return (gacc, lacc + w * l, macc, wacc + w), None
 

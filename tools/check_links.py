@@ -1,0 +1,60 @@
+#!/usr/bin/env python
+"""Dead-link checker for the repo's markdown: relative links must resolve.
+
+Usage: ``python tools/check_links.py README.md docs`` — arguments are
+markdown files or directories (scanned recursively for ``*.md``).  External
+links (http/https/mailto) are skipped; in-page ``#anchors`` are checked for
+file existence only.  Exits non-zero listing every dead link.
+"""
+from __future__ import annotations
+
+import os
+import re
+import sys
+
+LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+SKIP = ("http://", "https://", "mailto:")
+
+
+def md_files(args):
+    for a in args:
+        if os.path.isdir(a):
+            for root, _, names in os.walk(a):
+                for n in sorted(names):
+                    if n.endswith(".md"):
+                        yield os.path.join(root, n)
+        else:
+            yield a
+
+
+def check(path: str):
+    dead = []
+    with open(path, encoding="utf-8") as f:
+        for lineno, line in enumerate(f, 1):
+            for target in LINK_RE.findall(line):
+                if target.startswith(SKIP) or target.startswith("#"):
+                    continue
+                rel = target.split("#")[0]
+                resolved = os.path.normpath(
+                    os.path.join(os.path.dirname(path), rel))
+                if not os.path.exists(resolved):
+                    dead.append((lineno, target, resolved))
+    return dead
+
+
+def main(argv):
+    if not argv:
+        argv = ["README.md", "docs"]
+    failures = 0
+    checked = 0
+    for path in md_files(argv):
+        checked += 1
+        for lineno, target, resolved in check(path):
+            failures += 1
+            print(f"DEAD LINK {path}:{lineno}: ({target}) -> {resolved}")
+    print(f"checked {checked} markdown file(s), {failures} dead link(s)")
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))
