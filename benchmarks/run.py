@@ -240,7 +240,8 @@ def minirun():
 
 
 # ---------------------------------------------------------------------------
-# Pipeline sweep: 3-D-only vs 3-D+PP on 8 host devices (real wall-clock)
+# Pipeline sweep: 3-D-only vs 3-D+PP on 8 host devices (real wall-clock),
+# across families — every BlockStack pipelines, not just the dense decoder
 # ---------------------------------------------------------------------------
 PPSWEEP_SCRIPT = r"""
 import os
@@ -256,37 +257,45 @@ from repro.models import transformer
 from repro.train.step import make_train_step
 from repro.config import OptimConfig
 
-cfg = dataclasses.replace(reduced(get("tinyllama-1.1b"), d_model=256),
-                          n_layers=4, remat=False)
+ARCHS = {            # one representative per pipelined family class
+    "dense": ("tinyllama-1.1b", dict(n_layers=4, d_model=256)),
+    "moe":   ("mixtral-8x7b",   dict(n_layers=2)),
+    "ssm":   ("xlstm-350m",     dict(n_layers=2)),   # mLSTM/sLSTM interleave
+}
 opt_cfg = OptimConfig(lr=1e-3, warmup=2, total_steps=10)
 out = {}
-# same 8 devices, same global batch: 3-D-only vs 3-D+PP compositions
-plans = {
-    "3d8":        ParallelPlan(n_model=8),
-    "3d4_pp2m4":  ParallelPlan(n_model=4, cube=(1, 2, 2), n_stages=2,
-                               microbatches=4),
-    "3d4_pp2m8":  ParallelPlan(n_model=4, cube=(1, 2, 2), n_stages=2,
-                               microbatches=8),
-}
-for name, plan in plans.items():
-    lay = plan.build()
-    params = transformer.init(cfg, lay, jax.random.key(0))
-    from repro.optim.optimizers import opt_state_abstract
-    from repro.core.params import init_params
-    opt_state = init_params(opt_state_abstract(
-        transformer.abstract_params(cfg, lay), lay, opt_cfg), jax.random.key(1))
-    shape = ShapeConfig("b", 128, 16, "train")
-    batch = next(iter(TokenStream(cfg, lay, shape)))
-    step = jax.jit(make_train_step(cfg, lay, opt_cfg))
-    p2, o2, m = step(params, opt_state, batch)
-    jax.block_until_ready(m["loss"])
-    t0 = time.perf_counter()
-    for _ in range(3):
-        p2, o2, m = step(p2, o2, batch)
+for fam, (arch, tweaks) in ARCHS.items():
+    cfg = dataclasses.replace(reduced(get(arch)), remat=False, **tweaks)
+    # same 8 devices, same global batch: 3-D-only vs 3-D+PP compositions
+    plans = {
+        "3d8":        ParallelPlan(n_model=8),
+        "3d4_pp2m4":  ParallelPlan(n_model=4, cube=(1, 2, 2), n_stages=2,
+                                   microbatches=4),
+    }
+    if fam == "dense":
+        plans["3d4_pp2m8"] = ParallelPlan(n_model=4, cube=(1, 2, 2),
+                                          n_stages=2, microbatches=8)
+    for name, plan in plans.items():
+        plan.validate(n_layers=cfg.n_layers, global_batch=16, model=cfg)
+        lay = plan.build()
+        params = transformer.init(cfg, lay, jax.random.key(0))
+        from repro.optim.optimizers import opt_state_abstract
+        from repro.core.params import init_params
+        opt_state = init_params(opt_state_abstract(
+            transformer.abstract_params(cfg, lay), lay, opt_cfg),
+            jax.random.key(1))
+        shape = ShapeConfig("b", 128, 16, "train")
+        batch = next(iter(TokenStream(cfg, lay, shape)))
+        step = jax.jit(make_train_step(cfg, lay, opt_cfg))
+        p2, o2, m = step(params, opt_state, batch)
         jax.block_until_ready(m["loss"])
-    out[name] = {"t_step": (time.perf_counter() - t0) / 3,
-                 "bubble": plan.bubble_fraction(),
-                 "loss": float(m["loss"])}
+        t0 = time.perf_counter()
+        for _ in range(3):
+            p2, o2, m = step(p2, o2, batch)
+            jax.block_until_ready(m["loss"])
+        out[fam + "|" + name] = {"t_step": (time.perf_counter() - t0) / 3,
+                                 "bubble": plan.bubble_fraction(),
+                                 "loss": float(m["loss"])}
 print("RESULT " + json.dumps(out))
 """
 

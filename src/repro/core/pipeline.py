@@ -1,23 +1,32 @@
 """Pipeline-parallel schedule over the 'pp' mesh axis.
 
-Stage partitioning and the pipelined tick loop live here; the model
-(models/transformer.py) supplies the per-stage compute and the loss head.
+Stage partitioning lives in the BlockStack registry
+(``models/registry.py``: plan → contiguous stage ranges, homogeneous slabs
+or selector-switched union slots); this module owns the schedule itself —
+the pipelined tick loop, the stage-boundary transfer, and the analytic
+bubble model.  The model supplies the per-stage compute (``stage_fn``) and
+the loss head (``collect_fn``).
 
 Design (composes with the paper's 3-D cube, Megatron-style — arXiv
 2104.04473):
 
-  * The layer stack is cut into ``pp`` contiguous stages of ``n_layers/pp``
-    blocks.  Stage s's block parameters are stacked with a leading stage dim
-    sharded over the 'pp' mesh axis, so each pipeline group holds only its
-    own 1/pp of the depth.  Embedding is consumed at stage 0 and the LM head
-    at the last stage (their tables stay replicated along 'pp'; the cube
-    still shards them).
+  * The layer plan is cut into ``pp`` contiguous stages.  Stage s's block
+    parameters are stacked with a leading stage dim sharded over the 'pp'
+    mesh axis, so each pipeline group holds only its own slots.  Embedding
+    (and any modality frontend) is consumed at stage 0 and the LM head at
+    the last stage (their tables stay replicated along 'pp'; the cube still
+    shards them).
   * The schedule runs ``T = m + pp - 1`` ticks for ``m`` microbatches.  At
     every tick all stages compute concurrently (a ``vmap`` over the stage
-    dim — each stage applying *its* parameter slab, each on a different
-    microbatch), then activations move stage s -> s+1 through a
+    dim — each stage applying *its* parameter slots, each on a different
+    microbatch), then the pipeline state moves stage s -> s+1 through a
     ``ppermute`` point-to-point transfer.  Stage 0 injects microbatch
     ``min(t, m-1)``; the last stage emits microbatch ``t - (pp-1)``.
+  * The pipeline state is a PYTREE per microbatch, not just the residual:
+    ``x`` (activations), read-only ``ctx`` carries that must stay attached
+    to their microbatch across stages (the audio encoder states consumed by
+    every cross-attention block), and ``aux`` accumulators that stages add
+    to (MoE router losses).  All three shift together.
   * The whole loop is a differentiable ``lax.scan``: reverse-mode grads
     replay the ticks backward with the transposed ppermute, i.e. the
     backward pipeline.  With per-block remat this is the 1F1B-equivalent
@@ -29,17 +38,18 @@ algorithm — the shard_map islands vmap cleanly over the stage dim.
 
 Sharding contract:
 
-  * entry:  block parameters arrive stacked as (pp, layers_per_stage, ...)
-    with dim 0 sharded over 'pp' and the trailing dims on the paper's
-    weight specs (out_ax, (in_ax, 'x')).  Embedding / head tables arrive
-    replicated along 'pp' (cube-sharded as usual).
-  * inside: the pipeline state buffer is (pp, B_mb, S, H) with dim 0 on
-    'pp' and the rest on the activation spec; ``shift_stages`` is the only
-    place activations cross the 'pp' axis (ppermute), and it preserves the
-    spec.
-  * exit:   per-microbatch losses leave replicated over 'pp' (every stage
-    group holds the scalar); gradients inherit the parameter specs above —
-    optimizer-state placement on top of them (ZeRO over dp) is the
+  * entry:  stage parameters arrive stacked as (pp, slots, ...) with dim 0
+    sharded over 'pp' and the trailing dims on the paper's weight specs.
+    Embedding / head / frontend / shared tables arrive replicated along
+    'pp' (cube-sharded as usual).
+  * inside: every pipeline-state leaf is (pp, ...) with dim 0 on 'pp' and
+    the rest on its declared spec (activations: the act spec; ctx carries:
+    the stack's ``ctx_specs``; aux: replicated scalars).  ``shift_stages``
+    is the only place state crosses the 'pp' axis (ppermute) and it
+    preserves every leaf's spec.
+  * exit:   the collected accumulator leaves replicated over 'pp' (every
+    stage group holds the scalars); gradients inherit the parameter specs
+    above — optimizer-state placement on top of them (ZeRO over dp) is the
     optimizer's business, not the pipeline's.
 """
 from __future__ import annotations
@@ -52,49 +62,43 @@ from jax import lax
 from jax.sharding import PartitionSpec as P
 
 from .compat import shard_map
-from .params import stack_tree
 from .topology import Layout, bubble_fraction, pipeline_efficiency
 
 F32 = jnp.float32
 
 
-# ---------------------------------------------------------------------------
-# Stage partitioning
-# ---------------------------------------------------------------------------
-def stage_stack_tree(block_tree, n_layers: int, layout: Layout):
-    """Stack one block's Param tree into (pp, layers_per_stage, ...) with the
-    stage dim sharded over 'pp' — stage s owns layers [s*Lps, (s+1)*Lps)."""
-    per = layout.stage_layers(n_layers)
-    return stack_tree(stack_tree(block_tree, per), layout.n_stages,
-                      shard="pp")
-
-
-def state_spec(layout: Layout, act_p: P) -> P:
-    """PartitionSpec of the (pp, B_mb, S, H) pipeline state buffer."""
-    return P("pp", *act_p)
+def state_spec(layout: Layout, leaf_spec: P) -> P:
+    """PartitionSpec of one (pp, ...) pipeline-state leaf."""
+    return P("pp", *(leaf_spec or ()))
 
 
 # ---------------------------------------------------------------------------
 # Point-to-point stage boundary transfer
 # ---------------------------------------------------------------------------
-def shift_stages(layout: Layout, state, act_p: P):
-    """Move activations stage s -> s+1 along 'pp' via collective-permute.
+def shift_stages(layout: Layout, state, specs):
+    """Move the pipeline-state pytree stage s -> s+1 along 'pp' via
+    collective-permute.
 
-    state: (pp, B_mb, S, H) with the leading dim sharded over 'pp'.  The last
-    stage's output is dropped (it was consumed by the loss head); stage 0's
-    slot is zero-filled (overwritten by the next injection).
+    Every leaf is (pp, ...) with the leading dim sharded over 'pp';
+    ``specs`` is a matching pytree of the per-leaf specs *without* the pp
+    dim.  The last stage's slice is dropped (consumed by the loss head);
+    stage 0's slot becomes zeros (overwritten by the next injection).
     """
     pp = layout.n_stages
     if pp == 1:
         return state
     perm = [(s, s + 1) for s in range(pp - 1)]
-    spec = state_spec(layout, act_p)
+    leaves, treedef = jax.tree.flatten(state)
+    spec_leaves = [state_spec(layout, sp) for sp in jax.tree.leaves(
+        specs, is_leaf=lambda s: s is None or isinstance(s, P))]
+    assert len(spec_leaves) == len(leaves), (len(spec_leaves), len(leaves))
 
-    def body(blk):
-        return lax.ppermute(blk, "pp", perm)
+    def body(*blks):
+        return tuple(lax.ppermute(b, "pp", perm) for b in blks)
 
-    return shard_map(body, mesh=layout.mesh, in_specs=spec, out_specs=spec,
-                     check_vma=False)(state)
+    out = shard_map(body, mesh=layout.mesh, in_specs=tuple(spec_leaves),
+                    out_specs=tuple(spec_leaves), check_vma=False)(*leaves)
+    return treedef.unflatten(out)
 
 
 # ---------------------------------------------------------------------------
@@ -102,35 +106,76 @@ def shift_stages(layout: Layout, state, act_p: P):
 # ---------------------------------------------------------------------------
 def pipeline_schedule(layout: Layout, *, x_mbs, stage_params,
                       stage_fn: Callable, collect_fn: Callable,
-                      collect_init, act_p: P):
+                      collect_init, act_p: P, ctx_mbs=None, ctx_specs=None,
+                      aux_init=None):
     """Run the synchronous pipelined loop.
 
     x_mbs:        (m, B_mb, S, H) embedded microbatches (stage-0 feed)
-    stage_params: pytree with leading (pp, layers_per_stage, ...) dims
-    stage_fn:     ((B_mb, S, H), one-stage params) -> (B_mb, S, H)
-    collect_fn:   (acc, last_stage_out, mb_index) -> acc; mb_index < 0 marks
-                  warm-up ticks whose output is pipeline garbage
+    ctx_mbs:      pytree of (m, ...) read-only per-microbatch context
+                  arrays that ride along (e.g. audio encoder states);
+                  ``ctx_specs`` gives each leaf's spec (without pp/m dims)
+    aux_init:     pytree of f32 scalars — per-microbatch accumulators reset
+                  at injection and summed into by the stages
+    stage_params: pytree with a leading (pp, ...) dim per leaf
+    stage_fn:     (x, ctx, aux, one-stage params) -> (x, aux)
+    collect_fn:   (acc, x_last, ctx_last, aux_last, mb_index) -> acc;
+                  mb_index < 0 marks warm-up ticks whose output is pipeline
+                  garbage
     Returns the final accumulator after m + pp - 1 ticks.
     """
     pp = layout.n_stages
     m = x_mbs.shape[0]
-    sspec = layout.sharding(state_spec(layout, act_p))
+    ctx_mbs = {} if ctx_mbs is None else ctx_mbs
+    ctx_specs = {} if ctx_specs is None else ctx_specs
+    aux_init = {} if aux_init is None else aux_init
     wsc = lax.with_sharding_constraint
 
-    state0 = jnp.zeros((pp,) + x_mbs.shape[1:], x_mbs.dtype)
-    state0 = wsc(state0, sspec)
+    specs = {"x": act_p, "ctx": ctx_specs,
+             "aux": jax.tree.map(lambda _: P(), aux_init)}
+
+    def buf(a):
+        return jnp.zeros((pp,) + a.shape[1:], a.dtype)
+
+    state0 = {
+        "x": buf(x_mbs),
+        "ctx": jax.tree.map(buf, ctx_mbs),
+        "aux": jax.tree.map(lambda s: jnp.zeros((pp,), F32), aux_init),
+    }
+
+    def constrain(state):
+        return jax.tree.map(
+            lambda a, sp: wsc(a, layout.sharding(state_spec(layout, sp))),
+            state, specs,
+            is_leaf=lambda s: s is None or isinstance(s, P))
+
+    state0 = constrain(state0)
+
+    def inject(state, t):
+        """Feed microbatch min(t, m-1) (+ fresh aux zeros) into stage 0."""
+        mb = jnp.minimum(t, m - 1)
+
+        def put(bufa, feed):
+            inj = lax.dynamic_index_in_dim(feed, mb, 0, keepdims=True)
+            return lax.dynamic_update_slice_in_dim(
+                bufa, inj.astype(bufa.dtype), 0, axis=0)
+
+        state = dict(state)
+        state["x"] = put(state["x"], x_mbs)
+        state["ctx"] = jax.tree.map(put, state["ctx"], ctx_mbs)
+        state["aux"] = jax.tree.map(lambda a: a.at[0].set(0.0), state["aux"])
+        return constrain(state)
 
     def tick(carry, t):
         state, acc = carry
-        inj = lax.dynamic_index_in_dim(x_mbs, jnp.minimum(t, m - 1), 0,
-                                       keepdims=True)
-        state = lax.dynamic_update_slice_in_dim(state, inj.astype(state.dtype),
-                                                0, axis=0)
-        state = wsc(state, sspec)
-        out = jax.vmap(stage_fn)(state, stage_params)
-        out = wsc(out, sspec)
-        acc = collect_fn(acc, out[pp - 1], t - (pp - 1))
-        state = shift_stages(layout, out, act_p)
+        state = inject(state, t)
+        out_x, out_aux = jax.vmap(stage_fn)(state["x"], state["ctx"],
+                                            state["aux"], stage_params)
+        out = constrain({"x": out_x, "ctx": state["ctx"], "aux": out_aux})
+        acc = collect_fn(acc, out["x"][pp - 1],
+                         jax.tree.map(lambda a: a[pp - 1], out["ctx"]),
+                         jax.tree.map(lambda a: a[pp - 1], out["aux"]),
+                         t - (pp - 1))
+        state = shift_stages(layout, out, specs)
         return (state, acc), None
 
     (_, acc), _ = lax.scan(tick, (state0, collect_init),

@@ -39,6 +39,18 @@ from . import topology
 from .topology import Layout, factor_model_axis, make_layout
 
 
+def pipeline_mode_error(n_stages: int, mode: str) -> Optional[str]:
+    """Plan-time (and forward-time backstop) message for pp with a
+    non-train mode; None when the combination is legal."""
+    if n_stages > 1 and mode != "train":
+        return (
+            f"n_stages={n_stages} with mode={mode!r}: the 1F1B pipeline is a "
+            "training-only schedule (microbatches stream through the "
+            "stages); for prefill/decode, rebuild the plan with n_stages=1 "
+            "and fold those devices into n_model or n_dp")
+    return None
+
+
 @dataclasses.dataclass(frozen=True)
 class ParallelPlan:
     n_pod: int = 1
@@ -87,9 +99,25 @@ class ParallelPlan:
 
     # ---- validation ----
     def validate(self, n_layers: Optional[int] = None,
-                 global_batch: Optional[int] = None) -> "ParallelPlan":
+                 global_batch: Optional[int] = None, model=None,
+                 mode: str = "train") -> "ParallelPlan":
+        """Raise ValueError on illegal compositions, naming the offending
+        fields.  ``model`` (a ModelConfig) enables the family-aware checks:
+        every registered family pipelines, so the remaining rejections are
+        precise (mtp head under pp, too few blocks for the stage count).
+        ``mode`` rejects serving plans with pp > 1 at plan time instead of
+        deep inside the forward."""
         if self.n_stages < 1 or self.microbatches < 1:
             raise ValueError("n_stages and microbatches must be >= 1")
+        err = pipeline_mode_error(self.n_stages, mode)
+        if err:
+            raise ValueError(err)
+        if model is not None and self.n_stages > 1:
+            # lazy import: core must stay importable without models
+            from ..models.registry import pipeline_unsupported_reason
+            reason = pipeline_unsupported_reason(model, self.n_stages)
+            if reason:
+                raise ValueError(reason)
         if self.n_stages > 1 and self.microbatches < self.n_stages:
             # legal but the bubble dominates; flag obvious misconfigurations
             import warnings
@@ -97,9 +125,19 @@ class ParallelPlan:
                 f"microbatches={self.microbatches} < pp={self.n_stages}: "
                 f"bubble fraction {self.bubble_fraction():.2f} >= 1; "
                 "raise --microbatch for pipeline efficiency")
-        if n_layers is not None and n_layers % self.n_stages:
-            raise ValueError(
-                f"n_layers={n_layers} not divisible by pp={self.n_stages}")
+        if n_layers is not None and self.n_stages > 1:
+            if n_layers < self.n_stages:
+                raise ValueError(
+                    f"n_layers={n_layers} < n_stages={self.n_stages}: every "
+                    "pipeline stage needs at least one layer")
+            if n_layers % self.n_stages:
+                import warnings
+                r = n_layers % self.n_stages
+                warnings.warn(
+                    f"n_layers={n_layers} not divisible by "
+                    f"pp={self.n_stages}: the first {r} stage(s) take one "
+                    "extra layer (non-uniform stages; padding slots idle on "
+                    "the shorter stages)")
         if global_batch is not None and global_batch % self.microbatches:
             raise ValueError(
                 f"global_batch={global_batch} not divisible by "

@@ -60,6 +60,25 @@ def pipeline_efficiency(n_stages: int, microbatches: int) -> float:
     return m / (m + n_stages - 1)
 
 
+def stage_assignment(n_items: int, n_stages: int) -> Tuple[Tuple[int, int], ...]:
+    """Contiguous [start, end) ranges assigning ``n_items`` layer slots to
+    ``n_stages`` pipeline stages.  Non-divisible counts are legal: the first
+    ``n_items % n_stages`` stages take one extra slot (the LM head lives on
+    the last stage, so the remainder goes early to balance compute)."""
+    if n_items < n_stages:
+        raise ValueError(
+            f"cannot split {n_items} blocks over pp={n_stages} stages: "
+            "every stage needs at least one block")
+    base, rem = divmod(n_items, n_stages)
+    bounds = []
+    start = 0
+    for s in range(n_stages):
+        end = start + base + (1 if s < rem else 0)
+        bounds.append((start, end))
+        start = end
+    return tuple(bounds)
+
+
 @dataclasses.dataclass(frozen=True)
 class Layout:
     """Parallel layout: mesh + the paper's direction bookkeeping.
@@ -137,9 +156,10 @@ class Layout:
         return n_layers // self.n_stages
 
     def stage_bounds(self, n_layers: int) -> Tuple[Tuple[int, int], ...]:
-        """[(start, end)) layer ranges per stage, contiguous in depth."""
-        per = self.stage_layers(n_layers)
-        return tuple((s * per, (s + 1) * per) for s in range(self.n_stages))
+        """[(start, end)) layer ranges per stage, contiguous in depth.
+        Non-divisible depths give the first ``n_layers % pp`` stages one
+        extra layer (see ``stage_assignment``)."""
+        return stage_assignment(n_layers, self.n_stages)
 
     def bubble_fraction(self) -> float:
         """1F1B / GPipe pipeline bubble (pp-1)/m as a fraction of ideal time."""

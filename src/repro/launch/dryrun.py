@@ -115,17 +115,25 @@ def memory_model(cfg, layout, shape, opt_cfg):
     components (the optimizer line was previously missing entirely), plus
     the replicated-optimizer baseline so the ZeRO savings are visible:
 
-      * params      — model weights, sharded per their own specs.
+      * params      — model weights, sharded per their own specs (MoE expert
+                      tables, SSM projections etc. come from the family's
+                      real parameter tree, per pipeline stage when pp > 1).
       * grads       — the f32 accumulation buffer when microbatching (param
                       dtype otherwise); dp-sharded under zero_stage >= 2.
       * opt         — Adam m/v (f32) or Adafactor stats, dp-sharded under
                       zero_stage >= 1 (~1/dp of the replicated baseline).
-      * act (est.)  — one (B_mb, S, H) residual per resident layer, bf16; a
-                      rough lower bound (remat keeps ~1 checkpoint/block).
+      * act (est.)  — per-family per-layer activation + state bytes from
+                      the BlockStack registry (dense: one bf16 residual;
+                      MoE: + capacity-padded dispatch buffers; Mamba/xLSTM:
+                      + expanded projections and f32 recurrent state;
+                      audio: + the encoder-state pipeline carry), per
+                      resident stage slot; a rough lower bound (remat keeps
+                      ~1 checkpoint/block).
     """
     import dataclasses as _dc
     import math as _math
     from repro.core.params import sharded_bytes, tree_map_params
+    from repro.models import registry as model_registry
     from repro.optim.optimizers import zero_partition_spec
 
     abstract = transformer.abstract_params(cfg, layout)
@@ -142,13 +150,17 @@ def memory_model(cfg, layout, shape, opt_cfg):
                           layout)
     lay0 = _dc.replace(layout, zero_stage=0)
     opt_b0 = sharded_bytes(opt_state_abstract(abstract, lay0, opt_cfg), lay0)
+
+    stack = model_registry.get_stack(cfg.family)
     bsh = _math.prod(layout.size(a) for a in layout.batch_axes) or 1
     ssh = _math.prod(layout.size(a) for a in layout.seq_axes) \
         * layout.size("y")
-    act_b = int((cfg.n_layers / layout.n_stages)
-                * max(shape.global_batch / m / bsh, 1)
-                * (shape.seq_len / ssh) * (cfg.d_model / layout.size("z"))
-                * 2)
+    b_dev = max(shape.global_batch / m / bsh, 1)
+    s_dev = shape.seq_len / ssh
+    n_blocks = len(stack.layer_plan(cfg))
+    resident = -(-n_blocks // layout.n_stages)       # stage slots (ceil)
+    act_b = (resident * stack.act_bytes(cfg, layout, b_dev, s_dev)
+             + stack.carry_bytes(cfg, layout, b_dev))
     return {
         "zero_stage": zs,
         "param_gib": param_b / 2**30,
@@ -180,13 +192,18 @@ def lower_one(arch: str, shape_name: str, *, multi_pod: bool,
                 "status": "SKIP", "reason": "full quadratic attention; "
                 "sub-quadratic required (DESIGN.md §4)"}
     if n_pp > 1 and shape.kind != "train":
+        from repro.core.plan import pipeline_mode_error
         return {"arch": arch, "shape": shape_name, "multi_pod": multi_pod,
                 "status": "SKIP",
-                "reason": f"pp={n_pp} is a training schedule; serve with pp=1"}
-    if n_pp > 1 and (cfg.family.value != "dense" or cfg.n_layers % n_pp):
-        return {"arch": arch, "shape": shape_name, "multi_pod": multi_pod,
-                "status": "SKIP",
-                "reason": f"pp={n_pp} needs a dense arch with divisible depth"}
+                "reason": pipeline_mode_error(n_pp, shape.kind)}
+    if n_pp > 1:
+        # every family pipelines through the BlockStack registry; the only
+        # remaining rejections are config-level (mtp head, too few blocks)
+        from repro.models.registry import pipeline_unsupported_reason
+        reason = pipeline_unsupported_reason(cfg, n_pp)
+        if reason:
+            return {"arch": arch, "shape": shape_name, "multi_pod": multi_pod,
+                    "status": "SKIP", "reason": reason}
     layout = build_layout(arch, shape_name, multi_pod, strategy, n_pp,
                           microbatches, zero_stage)
     specs = transformer.input_specs(cfg, layout, shape)

@@ -80,7 +80,9 @@ def main(argv=None):
                         strategy=args.strategy, n_stages=args.pp,
                         microbatches=args.microbatch,
                         zero_stage=None if args.zero < 0 else args.zero)
-    plan.validate(n_layers=cfg.n_layers, global_batch=args.batch)
+    # family-aware plan-time validation: unsupported compositions (mtp+pp,
+    # serve-mode pp, too-shallow stacks) fail here with a precise message
+    plan.validate(n_layers=cfg.n_layers, global_batch=args.batch, model=cfg)
     layout = plan.build()
     shape = ShapeConfig("cli", args.seq, args.batch, "train")
     opt_cfg = OptimConfig(name=args.optimizer, lr=args.lr, warmup=args.warmup,

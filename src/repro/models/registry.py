@@ -1,0 +1,822 @@
+"""Architecture-agnostic BlockStack registry: the model-zoo protocol.
+
+Every family (dense, moe, ssm, hybrid, vlm, audio) registers exactly one
+``BlockStack`` that describes its layer stack *as data*: a per-layer plan of
+named block kinds plus, per kind, a parameter builder, an apply function and
+a decode-state builder.  ``models/transformer.py``'s ``forward`` /
+``forward_pipelined`` are thin family-free drivers over this protocol, and
+``core/pipeline.py`` schedules any plan — homogeneous or interleaved,
+divisible depth or not — over the 'pp' mesh axis.
+
+Protocol contract:
+
+  * ``BlockKind.params(layout, cfg, dirs)`` builds ONE layer's Param tree;
+    the drivers stack it (``stack_tree``) per segment / per stage.  A kind
+    with ``params=None`` owns no per-layer weights and reads the stack's
+    ``shared_params`` tree instead (hybrid zamba2's shared attention block).
+  * ``BlockKind.apply(layout, cfg, dirs, x, p, positions, *, ctx, shared,
+    decode, cache, collect_kv) -> (x, new_cache, aux)``.  ``ctx`` is the
+    per-microbatch context produced by the stack's ``frontend`` (e.g. the
+    audio encoder states consumed by cross attention); in the pipeline it
+    travels with its microbatch through the stages.  ``aux`` is an f32
+    scalar folded into the loss (MoE router losses); zero elsewhere.
+  * ``BlockKind.cache(layout, cfg, dirs, batch, length)`` builds ONE
+    layer's decode state (kv cache / SSM state / sLSTM state / cross-kv).
+
+Pipeline parameterization (``pipeline_info`` / ``pipeline_stack_params``):
+the plan is cut into ``pp`` contiguous stage ranges (``stage_assignment``;
+non-divisible depth gives earlier stages one extra slot).  When the plan is
+a single kind with equal stage sizes, stage s holds a ``(pp, L/pp, ...)``
+slab of that kind — identical to the dense-only PR 1 layout.  Otherwise
+every stage holds ``slots = ceil(len(plan)/pp)`` *union* slots carrying one
+layer's parameters of EVERY kind in the plan plus an int selector choosing
+which kind is live (NOOP = padding slot, identity).  Unselected / padding
+parameters receive zero gradient and never influence the forward value.
+The cost is compute as well as memory: each union slot runs every kind's
+candidate and selects one (``jnp.where`` — under the stage ``vmap`` a
+``lax.switch`` would execute all branches too), so per-slot FLOPs multiply
+by the number of kinds in the plan.  Interleaved families (hybrid, xlstm,
+MoE with first_k_dense, non-divisible depth) pay roughly kinds x the pp=1
+stage compute; homogeneous plans pay nothing extra.
+
+Sharding contract: this module only *names* placements through the Param
+specs the per-family builders already carry; stage slabs get the extra
+leading 'pp' dim via ``stack_tree(..., shard='pp')`` so each pipeline group
+holds only its own slots.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import math
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.sharding import PartitionSpec as P
+
+from ..config import Family, ModelConfig
+from ..core.linear3d import act_spec, embed_lookup, wsc
+from ..core.params import Param, stack_tree
+from ..core.topology import Dirs, Layout, stage_assignment
+from . import blocks as B
+from . import encdec, mamba2, mla, moe as moe_mod, xlstm
+
+F32 = jnp.float32
+NOOP = -1                      # selector value of a padding slot (identity)
+
+
+def _zero():
+    return jnp.zeros((), F32)
+
+
+# ---------------------------------------------------------------------------
+# Protocol dataclasses
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class BlockKind:
+    """One block type: how to build its params, run it, and cache its state."""
+    name: str
+    params: Optional[Callable]          # (layout, cfg, dirs) -> one-layer tree
+    apply: Callable                     # see module docstring
+    cache: Optional[Callable] = None    # (layout, cfg, dirs, batch, len) -> tree
+    has_aux: bool = False
+
+
+def _no_extras(layout, cfg, dirs):
+    return {}
+
+
+def _no_ctx_specs(layout, cfg, dirs):
+    return {}
+
+
+@dataclasses.dataclass(frozen=True)
+class BlockStack:
+    """One family's stack: the layer plan plus every family-specific hook the
+    drivers need (frontend, labels, input specs, memory estimates)."""
+    family: Family
+    kinds: Dict[str, BlockKind]
+    layer_plan: Callable                # cfg -> tuple of kind names
+    frontend: Callable = None           # set in __post_init__ defaults below
+    frontend_params: Callable = _no_extras
+    shared_params: Callable = _no_extras
+    ctx_specs: Callable = _no_ctx_specs
+    labels: Callable = None
+    mb_weight: Callable = None
+    inputs: Callable = None             # dry-run input specs (no labels)
+    label_len: Callable = None          # cfg, seq -> label sequence length
+    act_bytes: Callable = None          # (cfg, layout, b, s) -> per-layer bytes
+    carry_bytes: Callable = None        # (cfg, layout, b) -> pipeline carry bytes
+
+    def __post_init__(self):
+        defaults = {
+            "frontend": _text_frontend, "labels": _text_labels,
+            "mb_weight": _text_mb_weight, "inputs": _text_inputs,
+            "label_len": lambda cfg, s: s, "act_bytes": _residual_act_bytes,
+            "carry_bytes": lambda cfg, layout, b: 0,
+        }
+        for k, v in defaults.items():
+            if getattr(self, k) is None:
+                object.__setattr__(self, k, v)
+
+
+# ---------------------------------------------------------------------------
+# Shared frontend / labels / input helpers
+# ---------------------------------------------------------------------------
+def embed(layout: Layout, cfg: ModelConfig, dirs: Dirs, params, batch,
+          decode=False):
+    tokens = batch["token" if decode else "tokens"]
+    x = embed_lookup(layout, dirs, tokens, params["embed"], decode=decode)
+    if cfg.emb_scale_sqrt_d:
+        x = x * math.sqrt(cfg.d_model)
+    return x
+
+
+def _text_frontend(layout, cfg, dirs, params, batch, *, mode):
+    return embed(layout, cfg, dirs, params, batch, decode=mode == "decode"), {}
+
+
+def _text_labels(cfg, batch):
+    labels = batch["labels"]
+    return labels, (labels >= 0).astype(F32)
+
+
+def _text_mb_weight(cfg, mb):
+    return jnp.sum((mb["labels"] >= 0).astype(F32))
+
+
+def _text_inputs(cfg, layout, shape, sds, tok_spec):
+    return {"tokens": sds((shape.global_batch, shape.seq_len), jnp.int32,
+                          tok_spec)}
+
+
+def _vlm_frontend(layout, cfg, dirs, params, batch, *, mode):
+    x = embed(layout, cfg, dirs, params, batch, decode=mode == "decode")
+    if mode != "decode":
+        vis = batch["patch_embeds"].astype(x.dtype)
+        x = jnp.concatenate([vis, x], axis=1)
+        x = wsc(x, layout.sharding(act_spec(layout, dirs)))
+    return x, {}
+
+
+def _vlm_labels(cfg, batch):
+    labels = batch["labels"]
+    pad = jnp.zeros((labels.shape[0], cfg.n_vision_tokens), labels.dtype)
+    mask = jnp.concatenate([jnp.zeros(pad.shape, F32),
+                            jnp.ones(labels.shape, F32)], axis=1)
+    return jnp.concatenate([pad, labels], axis=1), mask
+
+
+def _vlm_mb_weight(cfg, mb):
+    # the VLM loss masks vision positions but counts every text position
+    # (see _vlm_labels) — mirror that so microbatch re-weighting matches
+    return jnp.float32(mb["labels"].size)
+
+
+def _vlm_inputs(cfg, layout, shape, sds, tok_spec):
+    nv = cfg.n_vision_tokens
+    Bn, S = shape.global_batch, shape.seq_len
+    return {
+        "tokens": sds((Bn, S - nv), jnp.int32, tok_spec),
+        "patch_embeds": sds((Bn, nv, cfg.d_model), jnp.bfloat16,
+                            P(layout.batch_spec(), None, None)),
+    }
+
+
+def _audio_frontend(layout, cfg, dirs, params, batch, *, mode):
+    x = embed(layout, cfg, dirs, params, batch, decode=mode == "decode")
+    if mode == "decode":
+        return x, {}
+    enc = encdec.encoder_apply(layout, cfg, dirs, batch["frames"],
+                               params["encoder"],
+                               remat=cfg.remat and mode == "train")
+    return x, {"enc": enc}
+
+
+def _audio_frontend_params(layout, cfg, dirs):
+    return {"encoder": encdec.encoder_params(layout, cfg, dirs)}
+
+
+def _audio_ctx_specs(layout, cfg, dirs):
+    return {"enc": act_spec(layout, dirs)}
+
+
+def _audio_inputs(cfg, layout, shape, sds, tok_spec):
+    Bn, S = shape.global_batch, shape.seq_len
+    dirs = Dirs("y", "z")
+    return {
+        "frames": sds((Bn, cfg.encoder.n_frames, cfg.d_model), jnp.bfloat16,
+                      act_spec(layout, dirs)),
+        "tokens": sds((Bn, S), jnp.int32, tok_spec),
+    }
+
+
+# ---------------------------------------------------------------------------
+# Block kinds
+# ---------------------------------------------------------------------------
+def _attn_block_params(layout, cfg, dirs, d_ff=None):
+    if cfg.mla is not None:
+        return {"ln1": B.make_norm_params(layout, cfg, dirs),
+                "ln2": B.make_norm_params(layout, cfg, dirs),
+                "mla": mla.mla_params(layout, cfg, dirs),
+                "mlp": B.mlp_params(layout, cfg, dirs, d_ff=d_ff)}
+    return B.dense_block_params(layout, cfg, dirs, d_ff=d_ff)
+
+
+def _attn_block_apply(layout, cfg, dirs, x, p, positions, *, ctx, shared,
+                      decode=False, cache=None, collect_kv=False):
+    if "mla" in p:
+        h = B.apply_norm(cfg, x, p["ln1"])
+        a, new_cache = mla.mla_apply(layout, cfg, dirs, h, p["mla"], positions,
+                                     decode=decode, cache=cache)
+        x = x + a
+        h = B.apply_norm(cfg, x, p["ln2"])
+        x = x + B.mlp_apply(layout, cfg, dirs, h, p["mlp"], decode=decode)
+        return x, new_cache, _zero()
+    x, new_cache = B.dense_block_apply(layout, cfg, dirs, x, p, positions,
+                                       decode=decode, cache=cache,
+                                       return_kv=collect_kv)
+    return x, new_cache, _zero()
+
+
+# Public names for the dense attention block builders: the mtp head in
+# models/transformer.py builds one extra dense block outside any stack.
+def attn_block_params(layout, cfg, dirs, d_ff=None):
+    return _attn_block_params(layout, cfg, dirs, d_ff=d_ff)
+
+
+def attn_block_apply(layout, cfg, dirs, x, p, positions, *, ctx, shared,
+                     decode=False, cache=None, collect_kv=False):
+    return _attn_block_apply(layout, cfg, dirs, x, p, positions, ctx=ctx,
+                             shared=shared, decode=decode, cache=cache,
+                             collect_kv=collect_kv)
+
+
+def _attn_cache(layout, cfg, dirs, batch, length):
+    L = min(length, cfg.window) if cfg.window else length
+    if cfg.mla is not None:
+        return mla.mla_cache_init(layout, cfg, dirs, batch, L)
+    return B.kv_cache_init(layout, cfg, dirs, batch, L)
+
+
+def _moe_dense_params(layout, cfg, dirs):
+    return _attn_block_params(layout, cfg, dirs,
+                              d_ff=cfg.moe.dense_ff or cfg.d_ff)
+
+
+def _moe_block_params(layout, cfg, dirs):
+    p = {"ln1": B.make_norm_params(layout, cfg, dirs),
+         "ln2": B.make_norm_params(layout, cfg, dirs),
+         "moe": moe_mod.moe_params(layout, cfg, dirs)}
+    if cfg.mla is not None:
+        p["mla"] = mla.mla_params(layout, cfg, dirs)
+    else:
+        p["attn"] = B.attn_params(layout, cfg, dirs)
+    return p
+
+
+def _moe_block_apply(layout, cfg, dirs, x, p, positions, *, ctx, shared,
+                     decode=False, cache=None, collect_kv=False):
+    h = B.apply_norm(cfg, x, p["ln1"])
+    if "mla" in p:
+        a, new_cache = mla.mla_apply(layout, cfg, dirs, h, p["mla"], positions,
+                                     decode=decode, cache=cache)
+    else:
+        a, new_cache = B.attn_apply(layout, cfg, dirs, h, p["attn"], positions,
+                                    window=cfg.window, decode=decode,
+                                    cache=cache, return_kv=collect_kv)
+    x = x + a
+    h = B.apply_norm(cfg, x, p["ln2"])
+    y, aux = moe_mod.moe_apply(layout, cfg, dirs, h, p["moe"], decode=decode)
+    return x + y, new_cache, aux
+
+
+def _mamba_apply(layout, cfg, dirs, x, p, positions, *, ctx, shared,
+                 decode=False, cache=None, collect_kv=False):
+    x, new_cache = mamba2.mamba_apply(layout, cfg, dirs, x, p, positions,
+                                      decode=decode, cache=cache)
+    return x, new_cache, _zero()
+
+
+def _shared_attn_apply(layout, cfg, dirs, x, p, positions, *, ctx, shared,
+                       decode=False, cache=None, collect_kv=False):
+    # per-layer params p is None: the ONE shared attention block's weights
+    # live in params["shared"]["attn"] (replicated over 'pp')
+    x, new_cache = B.dense_block_apply(layout, cfg, dirs, x, shared["attn"],
+                                       positions, decode=decode, cache=cache)
+    return x, new_cache, _zero()
+
+
+def _mlstm_apply(layout, cfg, dirs, x, p, positions, *, ctx, shared,
+                 decode=False, cache=None, collect_kv=False):
+    x, new_cache = xlstm.mlstm_apply(layout, cfg, dirs, x, p, positions,
+                                     decode=decode, cache=cache)
+    return x, new_cache, _zero()
+
+
+def _slstm_apply(layout, cfg, dirs, x, p, positions, *, ctx, shared,
+                 decode=False, cache=None, collect_kv=False):
+    x, new_cache = xlstm.slstm_apply(layout, cfg, dirs, x, p, positions,
+                                     decode=decode, cache=cache)
+    return x, new_cache, _zero()
+
+
+def _xdec_apply(layout, cfg, dirs, x, p, positions, *, ctx, shared,
+                decode=False, cache=None, collect_kv=False):
+    """Audio decoder block: self attention + cross attention over the encoder
+    states (train/prefill: ``ctx['enc']``; decode: the per-layer cached
+    cross k/v)."""
+    if decode:
+        enc_or_kv = (cache["xk"], cache["xv"])
+        x, new_kv = encdec.decoder_block_apply(layout, cfg, dirs, x, p,
+                                               positions, enc_or_kv,
+                                               decode=True, cache=cache["kv"])
+        return x, {"kv": new_kv, "xk": cache["xk"], "xv": cache["xv"]}, _zero()
+    x, _ = encdec.decoder_block_apply(layout, cfg, dirs, x, p, positions,
+                                      ctx["enc"], decode=False)
+    return x, None, _zero()
+
+
+def _xdec_cache(layout, cfg, dirs, batch, length):
+    L = min(length, cfg.window) if cfg.window else length
+    sp = B.cache_specs(layout, cfg, dirs)
+    Fr, nkv, dh = cfg.encoder.n_frames, cfg.n_kv, cfg.head_dim
+    return {
+        "kv": B.kv_cache_init(layout, cfg, dirs, batch, L),
+        "xk": Param((batch, Fr, nkv, dh), P(*sp.k), init="zeros"),
+        "xv": Param((batch, Fr, nkv, dh), P(*sp.v), init="zeros"),
+    }
+
+
+# ---------------------------------------------------------------------------
+# Layer plans
+# ---------------------------------------------------------------------------
+def _plan_dense(cfg):
+    return ("dense",) * cfg.n_layers
+
+
+def _plan_moe(cfg):
+    fk = cfg.moe.first_k_dense if cfg.moe else 0
+    return ("dense",) * fk + ("moe",) * (cfg.n_layers - fk)
+
+
+def _plan_hybrid(cfg):
+    """Mamba segments with one shared attention block after every full
+    ``attn_every`` segment (zamba2)."""
+    every = cfg.ssm.attn_every or (cfg.n_layers + 1)
+    plan, done = [], 0
+    while done < cfg.n_layers:
+        n = min(every, cfg.n_layers - done)
+        done += n
+        plan += ["mamba"] * n
+        if cfg.ssm.attn_every and n == every:
+            plan.append("attn")
+    return tuple(plan)
+
+
+def _plan_xlstm(cfg):
+    """mLSTM with one sLSTM block per ``slstm_every`` positions (xLSTM)."""
+    every = cfg.ssm.slstm_every
+    if not every:
+        return ("mlstm",) * cfg.n_layers
+    plan, done = [], 0
+    while done < cfg.n_layers:
+        n = min(every - 1, cfg.n_layers - done)
+        plan += ["mlstm"] * n
+        done += n
+        if done < cfg.n_layers:
+            plan.append("slstm")
+            done += 1
+    return tuple(plan)
+
+
+def _plan_audio(cfg):
+    return ("xdec",) * cfg.n_layers
+
+
+# ---------------------------------------------------------------------------
+# Per-family activation / carry byte estimates (dry-run memory model).
+# b, s are the PER-DEVICE microbatch batch and sequence extents; the hidden
+# split over the cube's out_ax ('z' at block entry) is applied here.
+# ---------------------------------------------------------------------------
+def _h_loc(cfg, layout):
+    return cfg.d_model / max(layout.size("z"), 1)
+
+
+def _residual_act_bytes(cfg, layout, b, s):
+    return int(b * s * _h_loc(cfg, layout) * 2)            # one bf16 residual
+
+
+def _moe_act_bytes(cfg, layout, b, s):
+    # residual + the capacity-padded dispatch/combine buffers:
+    # E * cap * h ≈ tokens * top_k * capacity_factor * h
+    res = _residual_act_bytes(cfg, layout, b, s)
+    disp = int(b * s * cfg.moe.top_k * cfg.moe.capacity_factor
+               * _h_loc(cfg, layout) * 2)
+    return res + disp
+
+
+def _mamba_act_bytes(cfg, layout, b, s):
+    # residual + expanded conv channels (bf16) + f32 SSD chunk state,
+    # heads sharded over the projection's feature axis ('y' at entry)
+    d_in = cfg.ssm.expand * cfg.d_model
+    nh = d_in // mamba2.HEAD_DIM
+    fsh = max(layout.size("y"), 1)
+    res = _residual_act_bytes(cfg, layout, b, s)
+    conv = int(b * s * (d_in / fsh) * 2)
+    state = int(b * (nh / fsh) * mamba2.HEAD_DIM * cfg.ssm.d_state * 4)
+    return res + conv + state
+
+
+def _xlstm_act_bytes(cfg, layout, b, s):
+    # residual + q/k/v/z projections (factor-2 expand) + f32 mLSTM C state
+    d_in = 2 * cfg.d_model
+    dh = d_in // cfg.n_heads
+    fsh = max(layout.size("y"), 1)
+    res = _residual_act_bytes(cfg, layout, b, s)
+    proj = int(4 * b * s * (d_in / fsh) * 2)
+    state = int(b * (cfg.n_heads / fsh) * dh * dh * 4)
+    return res + proj + state
+
+
+def _audio_act_bytes(cfg, layout, b, s):
+    # self + cross attention residual streams
+    return 2 * _residual_act_bytes(cfg, layout, b, s)
+
+
+def _audio_carry_bytes(cfg, layout, b):
+    # the encoder states ride the pipeline with each microbatch (ctx carry)
+    return int(b * cfg.encoder.n_frames * _h_loc(cfg, layout) * 2)
+
+
+# ---------------------------------------------------------------------------
+# The registry
+# ---------------------------------------------------------------------------
+_DENSE_KIND = BlockKind("dense", _attn_block_params, _attn_block_apply,
+                        _attn_cache)
+_MOE_DENSE_KIND = BlockKind("dense", _moe_dense_params, _attn_block_apply,
+                            _attn_cache)
+_MOE_KIND = BlockKind("moe", _moe_block_params, _moe_block_apply, _attn_cache,
+                      has_aux=True)
+_MAMBA_KIND = BlockKind(
+    "mamba", mamba2.mamba_params, _mamba_apply,
+    lambda layout, cfg, dirs, batch, length:
+        mamba2.mamba_cache_init(layout, cfg, dirs, batch))
+_SHARED_ATTN_KIND = BlockKind("attn", None, _shared_attn_apply, _attn_cache)
+_MLSTM_KIND = BlockKind(
+    "mlstm", xlstm.mlstm_params, _mlstm_apply,
+    lambda layout, cfg, dirs, batch, length:
+        xlstm.mlstm_cache_init(layout, cfg, dirs, batch))
+_SLSTM_KIND = BlockKind(
+    "slstm", xlstm.slstm_params, _slstm_apply,
+    lambda layout, cfg, dirs, batch, length:
+        xlstm.slstm_cache_init(layout, cfg, dirs, batch))
+_XDEC_KIND = BlockKind("xdec", encdec.decoder_block_params, _xdec_apply,
+                       _xdec_cache)
+
+
+REGISTRY: Dict[Family, BlockStack] = {
+    Family.DENSE: BlockStack(
+        family=Family.DENSE, kinds={"dense": _DENSE_KIND},
+        layer_plan=_plan_dense),
+    Family.MOE: BlockStack(
+        family=Family.MOE,
+        kinds={"dense": _MOE_DENSE_KIND, "moe": _MOE_KIND},
+        layer_plan=_plan_moe, act_bytes=_moe_act_bytes),
+    Family.HYBRID: BlockStack(
+        family=Family.HYBRID,
+        kinds={"mamba": _MAMBA_KIND, "attn": _SHARED_ATTN_KIND},
+        layer_plan=_plan_hybrid,
+        shared_params=lambda layout, cfg, dirs:
+            ({"attn": B.dense_block_params(layout, cfg, dirs)}
+             if cfg.ssm.attn_every else {}),
+        act_bytes=_mamba_act_bytes),
+    Family.SSM: BlockStack(
+        family=Family.SSM,
+        kinds={"mlstm": _MLSTM_KIND, "slstm": _SLSTM_KIND},
+        layer_plan=_plan_xlstm, act_bytes=_xlstm_act_bytes),
+    Family.VLM: BlockStack(
+        family=Family.VLM, kinds={"dense": _DENSE_KIND},
+        layer_plan=_plan_dense, frontend=_vlm_frontend, labels=_vlm_labels,
+        mb_weight=_vlm_mb_weight, inputs=_vlm_inputs,
+        label_len=lambda cfg, s: s - cfg.n_vision_tokens),
+    Family.AUDIO: BlockStack(
+        family=Family.AUDIO, kinds={"xdec": _XDEC_KIND},
+        layer_plan=_plan_audio, frontend=_audio_frontend,
+        frontend_params=_audio_frontend_params, ctx_specs=_audio_ctx_specs,
+        inputs=_audio_inputs, act_bytes=_audio_act_bytes,
+        carry_bytes=_audio_carry_bytes),
+}
+
+
+def get_stack(family: Family) -> BlockStack:
+    try:
+        return REGISTRY[family]
+    except KeyError:
+        raise ValueError(
+            f"no BlockStack registered for family {family!r}; known: "
+            f"{sorted(f.value for f in REGISTRY)}") from None
+
+
+# ---------------------------------------------------------------------------
+# pp = 1 driver: stacked-parameter construction + the segment runner
+# ---------------------------------------------------------------------------
+def _segments(plan) -> Tuple[Tuple[str, int], ...]:
+    segs = []
+    for k in plan:
+        if segs and segs[-1][0] == k:
+            segs[-1][1] += 1
+        else:
+            segs.append([k, 1])
+    return tuple((k, n) for k, n in segs)
+
+
+def kind_counts(stack: BlockStack, cfg: ModelConfig) -> Dict[str, int]:
+    counts: Dict[str, int] = {}
+    for k in stack.layer_plan(cfg):
+        counts[k] = counts.get(k, 0) + 1
+    return counts
+
+
+def stack_params(stack: BlockStack, cfg: ModelConfig, layout: Layout,
+                 dirs: Dirs):
+    """pp=1 parameter tree: one layer-stacked slab per kind in plan order."""
+    out = {}
+    for kname, n in kind_counts(stack, cfg).items():
+        kind = stack.kinds[kname]
+        if kind.params is not None:
+            out[kname] = stack_tree(kind.params(layout, cfg, dirs), n)
+    return out
+
+
+def stack_cache(stack: BlockStack, cfg: ModelConfig, layout: Layout,
+                dirs: Dirs, batch: int, length: int):
+    """Decode-state tree: one stacked slab per kind with per-layer state."""
+    out = {}
+    for kname, n in kind_counts(stack, cfg).items():
+        kind = stack.kinds[kname]
+        if kind.cache is not None:
+            out[kname] = stack_tree(kind.cache(layout, cfg, dirs, batch,
+                                               length), n)
+    return out
+
+
+def _tree_slice(tree, s, e):
+    return jax.tree.map(lambda a: a[s:e], tree)
+
+
+def _scan_segment(kind_apply, x, stacked_params, caches, remat, collect):
+    """Scan one homogeneous segment.  kind_apply(x, layer_p, layer_cache) ->
+    (x, new_cache, aux); new caches (or collected prefill kv) are stacked."""
+    def f(carry, xs):
+        x, aux = carry
+        bp, c = xs if caches is not None else (xs, None)
+        x, nc, a = kind_apply(x, bp, c)
+        out = nc if (caches is not None or collect) else None
+        return (x, aux + a), out
+
+    if remat:
+        f = jax.checkpoint(f)
+    xs = (stacked_params, caches) if caches is not None else stacked_params
+    (x, aux), ncs = lax.scan(f, (x, jnp.zeros((), F32)), xs)
+    return x, ncs, aux
+
+
+def run_stack(stack: BlockStack, layout: Layout, cfg: ModelConfig, dirs: Dirs,
+              x, params, positions, *, ctx, shared, mode: str, cache=None,
+              remat=False, collect_kv=False):
+    """Run the whole pp=1 layer plan: contiguous same-kind segments scan over
+    their parameter slab; shared-parameter kinds run unrolled.  Returns
+    (x, new_cache_by_kind, aux_total)."""
+    decode = mode == "decode"
+    cache = cache or {}
+    offs: Dict[str, int] = {}
+    parts: Dict[str, list] = {}
+    aux_total = jnp.zeros((), F32)
+
+    for kname, n in _segments(stack.layer_plan(cfg)):
+        kind = stack.kinds[kname]
+        off = offs.get(kname, 0)
+        offs[kname] = off + n
+        use_cache = decode and kind.cache is not None
+        apply = functools.partial(kind.apply, layout, cfg, dirs)
+
+        if kind.params is None:
+            # shared-parameter kind (e.g. hybrid's one attention block):
+            # unrolled application, per-occurrence cache slot
+            for i in range(n):
+                c = (jax.tree.map(lambda a: a[off + i], cache[kname])
+                     if use_cache else None)
+
+                def blk(xx, cc):
+                    return apply(xx, None, positions, ctx=ctx, shared=shared,
+                                 decode=decode, cache=cc,
+                                 collect_kv=collect_kv)
+
+                if remat:
+                    blk = jax.checkpoint(blk)
+                x, nc, a = blk(x, c)
+                aux_total = aux_total + a
+                if nc is not None:
+                    parts.setdefault(kname, []).append(
+                        jax.tree.map(lambda v: v[None], nc))
+        else:
+            kp = _tree_slice(params["stack"][kname], off, off + n)
+            kc = _tree_slice(cache[kname], off, off + n) if use_cache else None
+
+            def ka(xx, bp, cc, _apply=apply):
+                return _apply(xx, bp, positions, ctx=ctx, shared=shared,
+                              decode=decode, cache=cc, collect_kv=collect_kv)
+
+            x, ncs, a = _scan_segment(ka, x, kp, kc, remat,
+                                      collect_kv and not decode)
+            aux_total = aux_total + a
+            if ncs is not None:
+                parts.setdefault(kname, []).append(ncs)
+
+    new_cache = {
+        k: (v[0] if len(v) == 1
+            else jax.tree.map(lambda *xs: jnp.concatenate(xs, 0), *v))
+        for k, v in parts.items()}
+    return x, new_cache, aux_total
+
+
+# ---------------------------------------------------------------------------
+# pp > 1: stage tables, stage parameter slabs, the per-stage compute fn
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class PipelineInfo:
+    plan: Tuple[str, ...]
+    bounds: Tuple[Tuple[int, int], ...]     # per-stage [start, end) into plan
+    kind_order: Tuple[str, ...]             # selector index -> kind name
+    slots: int                              # parameter slots per stage
+    homogeneous: bool                       # single kind, equal stage sizes
+    selectors: Tuple[Tuple[int, ...], ...]  # (pp, slots), NOOP pads
+
+
+def pipeline_info(stack: BlockStack, cfg: ModelConfig,
+                  n_stages: int) -> PipelineInfo:
+    plan = stack.layer_plan(cfg)
+    bounds = stage_assignment(len(plan), n_stages)
+    kind_order = tuple(dict.fromkeys(plan))
+    sizes = [e - s for s, e in bounds]
+    homogeneous = len(kind_order) == 1 and len(set(sizes)) == 1
+    slots = max(sizes)
+    selectors = tuple(
+        tuple([kind_order.index(plan[i]) for i in range(s, e)]
+              + [NOOP] * (slots - (e - s)))
+        for s, e in bounds)
+    return PipelineInfo(plan, bounds, kind_order, slots, homogeneous,
+                        selectors)
+
+
+def pipeline_unsupported_reason(cfg: ModelConfig,
+                                n_stages: int) -> Optional[str]:
+    """None when the family/config supports pp=n_stages, else a precise
+    plan-time error message (the only hard holdout is the mtp head)."""
+    if n_stages <= 1:
+        return None
+    if cfg.mtp:
+        return (f"{cfg.arch}: mtp=True is incompatible with "
+                f"n_stages={n_stages} — the multi-token-prediction head "
+                "needs the embedding table and the final hidden states on "
+                "the same stage; train with n_stages=1 or disable mtp")
+    plan = get_stack(cfg.family).layer_plan(cfg)
+    if len(plan) < n_stages:
+        return (f"{cfg.arch}: only {len(plan)} stackable blocks for "
+                f"n_stages={n_stages} — every pipeline stage needs at least "
+                "one block; lower n_stages or deepen the model")
+    return None
+
+
+def pipeline_stack_params(stack: BlockStack, cfg: ModelConfig, layout: Layout,
+                          dirs: Dirs):
+    """Stage-stacked parameter tree: per kind a (pp, slots, ...) slab with
+    the stage dim sharded over 'pp'.  Homogeneous plans use exactly
+    len(plan)/pp slots (the PR 1 dense layout); heterogeneous or
+    non-divisible plans use union slots ceil(len(plan)/pp) wide — see the
+    module docstring for the padding contract."""
+    info = pipeline_info(stack, cfg, layout.n_stages)
+    per = (len(info.plan) // layout.n_stages if info.homogeneous
+           else info.slots)
+    out = {}
+    for kname in info.kind_order:
+        kind = stack.kinds[kname]
+        if kind.params is not None:
+            out[kname] = stack_tree(stack_tree(kind.params(layout, cfg, dirs),
+                                               per),
+                                    layout.n_stages, shard="pp")
+    return out
+
+
+def make_stage_fn(stack: BlockStack, cfg: ModelConfig, layout: Layout,
+                  dirs: Dirs, info: PipelineInfo, positions, shared,
+                  remat: bool):
+    """Per-stage compute for the pipeline schedule:
+    ``stage_fn(x, ctx, aux, stage_p) -> (x, aux)`` where ``stage_p`` is one
+    stage's slice of {'stack': ..., 'sel': ...} (the schedule vmaps it over
+    the leading 'pp' dim)."""
+    applies = {k: functools.partial(stack.kinds[k].apply, layout, cfg, dirs)
+               for k in info.kind_order}
+
+    if info.homogeneous:
+        kname = info.kind_order[0]
+
+        def stage_fn(x, ctx, aux, stage_p):
+            def ka(xx, bp, cc):
+                return applies[kname](xx, bp, positions, ctx=ctx,
+                                      shared=shared, decode=False, cache=None,
+                                      collect_kv=False)
+
+            x, _, a = _scan_segment(ka, x, stage_p["stack"][kname], None,
+                                    remat, False)
+            return x, {"aux": aux["aux"] + a}
+
+        return stage_fn
+
+    def stage_fn(x, ctx, aux, stage_p):
+        # union slots: every kind's candidate output is computed and the
+        # slot's selector picks the live one (NOOP keeps x — padding slot).
+        # Unselected branches get zero cotangents, so their (unused) union
+        # parameters receive zero gradient.
+        def slot(carry, xs):
+            x, a = carry
+            sp, sel = xs
+            x_new, a_new = x, a
+            for i, kname in enumerate(info.kind_order):
+                xi, _, ai = applies[kname](x, sp.get(kname), positions,
+                                           ctx=ctx, shared=shared,
+                                           decode=False, cache=None,
+                                           collect_kv=False)
+                take = sel == i
+                x_new = jnp.where(take, xi, x_new)
+                a_new = a_new + jnp.where(take, ai, 0.0)
+            return (x_new, a_new), None
+
+        if remat:
+            slot = jax.checkpoint(slot)
+        (x, a), _ = lax.scan(slot, (x, aux["aux"]),
+                             (stage_p["stack"], stage_p["sel"]))
+        return x, {"aux": a}
+
+    return stage_fn
+
+
+def repartition_stack(cfg: ModelConfig, stack_tree_in, src_layout: Layout,
+                      dst_layout: Layout):
+    """Re-cut a pp=1 'stack' subtree into a destination pipeline layout's
+    stage slabs (or back).  Union slots the destination plan never selects
+    are zero-filled.  The pp-equivalence tests use this to carry one
+    canonical init across layouts; ``checkpoint/store.py`` does NOT apply
+    it automatically — restoring under a different pp degree requires
+    re-cutting the 'stack' subtree with this function first (a restore
+    against the wrong-pp template fails loudly on the shape mismatch)."""
+    stack = get_stack(cfg.family)
+    plan = stack.layer_plan(cfg)
+
+    def to_flat(tree, layout):
+        """-> {kind: (count, ...)} flat per-kind layer stacks."""
+        if layout.n_stages == 1:
+            return tree
+        info = pipeline_info(stack, cfg, layout.n_stages)
+        out = {}
+        for kname, slab in tree.items():
+            idx = []   # (stage, slot) of each plan occurrence of this kind
+            for s, (lo, hi) in enumerate(info.bounds):
+                for j, i in enumerate(range(lo, hi)):
+                    if plan[i] == kname:
+                        idx.append((s, j))
+            out[kname] = jax.tree.map(
+                lambda a: jnp.stack([a[s, j] for s, j in idx], 0), slab)
+        return out
+
+    flat = to_flat(stack_tree_in, src_layout)
+    if dst_layout.n_stages == 1:
+        return flat
+    info = pipeline_info(stack, cfg, dst_layout.n_stages)
+    per = (len(plan) // dst_layout.n_stages if info.homogeneous
+           else info.slots)
+    out = {}
+    for kname, fl in flat.items():
+        occ = 0
+        # build (pp, per, ...) by placing each occurrence; zeros elsewhere
+        place = [[None] * per for _ in range(dst_layout.n_stages)]
+        for s, (lo, hi) in enumerate(info.bounds):
+            for j, i in enumerate(range(lo, hi)):
+                if plan[i] == kname:
+                    place[s][j] = occ
+                    occ += 1
+
+        def build(a):
+            rows = []
+            for s in range(dst_layout.n_stages):
+                slots = [a[k] if k is not None
+                         else jnp.zeros(a.shape[1:], a.dtype)
+                         for k in place[s]]
+                rows.append(jnp.stack(slots, 0))
+            return jnp.stack(rows, 0)
+
+        out[kname] = jax.tree.map(build, fl)
+    return out

@@ -1,32 +1,39 @@
 """Top-level model assembly: any assigned architecture -> init / train-loss /
 prefill / decode functions, all 3-D parallel (or 1-D/2-D baseline).
 
-Layer stacks run under ``lax.scan`` with layer-stacked parameter trees, so
-compile time and HLO size are O(1) in depth.  Heterogeneous stacks (hybrid
-zamba2, xlstm interleave, MoE first-k-dense) are split into homogeneous
-segments statically.
+This module is a thin, family-free driver over the BlockStack protocol
+(``models/registry.py``): each family registers its layer plan, block kinds,
+frontend and head hooks there, and ``forward`` / ``forward_pipelined`` only
+orchestrate — embed, run the registered stack, apply the head.  Layer stacks
+run under ``lax.scan`` with layer-stacked parameter trees, so compile time
+and HLO size are O(1) in depth; heterogeneous plans (hybrid zamba2, xlstm
+interleave, MoE first-k-dense) are split into homogeneous segments
+statically by the registry's segment runner.
+
+With ``layout.n_stages > 1`` the same plan runs pipelined (any family): the
+registry cuts the plan into per-stage parameter slots and
+``core/pipeline.py`` schedules them; per-microbatch context (audio encoder
+states) and aux accumulators (MoE router losses) travel through the
+pipeline alongside the activations.
 """
 from __future__ import annotations
 
-import dataclasses
-import functools
 import math
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict
 
 import jax
 import jax.numpy as jnp
 from jax import lax
 from jax.sharding import PartitionSpec as P
 
-from ..config import Family, ModelConfig, ShapeConfig
+from ..config import ModelConfig, ShapeConfig
 from ..core import pipeline as pp_mod
-from ..core.linear3d import (act_spec, act_spec_decode, cross_entropy,
-                             embed_lookup, embed_param, logits_spec,
-                             plinear, weight_param, wsc)
-from ..core.params import Param, abstract_arrays, init_params, stack_tree
+from ..core.linear3d import (act_spec, act_spec_decode, embed_param, plinear,
+                             weight_param, wsc)
+from ..core.params import Param, abstract_arrays, init_params
 from ..core.topology import Dirs, Layout
 from . import blocks as B
-from . import encdec, mamba2, mla, moe as moe_mod, xlstm
+from . import registry
 
 F32 = jnp.float32
 
@@ -36,106 +43,27 @@ def entry_dirs() -> Dirs:
 
 
 # ---------------------------------------------------------------------------
-# Stage plans for heterogeneous stacks
-# ---------------------------------------------------------------------------
-def hybrid_plan(cfg: ModelConfig):
-    """[(n_mamba, has_shared_attn_after)] segments."""
-    every = cfg.ssm.attn_every or (cfg.n_layers + 1)
-    segs = []
-    done = 0
-    while done < cfg.n_layers:
-        n = min(every, cfg.n_layers - done)
-        done += n
-        segs.append((n, done < cfg.n_layers + 1 and n == every))
-    return segs
-
-
-def xlstm_plan(cfg: ModelConfig):
-    """[(kind, count)] segments, kind in {'m', 's'}."""
-    every = cfg.ssm.slstm_every
-    if not every:
-        return [("m", cfg.n_layers)]
-    segs = []
-    done = 0
-    while done < cfg.n_layers:
-        n = min(every - 1, cfg.n_layers - done)
-        if n:
-            segs.append(("m", n))
-            done += n
-        if done < cfg.n_layers:
-            segs.append(("s", 1))
-            done += 1
-    return segs
-
-
-def moe_layer_counts(cfg: ModelConfig):
-    fk = cfg.moe.first_k_dense if cfg.moe else 0
-    return fk, cfg.n_layers - fk
-
-
-# ---------------------------------------------------------------------------
 # Parameters
 # ---------------------------------------------------------------------------
-def moe_block_params(layout: Layout, cfg: ModelConfig, dirs: Dirs):
-    p = {"ln1": B.make_norm_params(layout, cfg, dirs),
-         "ln2": B.make_norm_params(layout, cfg, dirs),
-         "moe": moe_mod.moe_params(layout, cfg, dirs)}
-    if cfg.mla is not None:
-        p["mla"] = mla.mla_params(layout, cfg, dirs)
-    else:
-        p["attn"] = B.attn_params(layout, cfg, dirs)
-    return p
-
-
-def dense_block_params_for(layout, cfg, dirs, d_ff=None):
-    if cfg.mla is not None:
-        return {"ln1": B.make_norm_params(layout, cfg, dirs),
-                "ln2": B.make_norm_params(layout, cfg, dirs),
-                "mla": mla.mla_params(layout, cfg, dirs),
-                "mlp": B.mlp_params(layout, cfg, dirs, d_ff=d_ff)}
-    return B.dense_block_params(layout, cfg, dirs, d_ff=d_ff)
-
-
 def abstract_params(cfg: ModelConfig, layout: Layout):
+    stack = registry.get_stack(cfg.family)
     dirs = entry_dirs()
     d = cfg.d_model
     p: Dict[str, Any] = {"embed": embed_param(layout, dirs, cfg.vocab, d)}
+    p.update(stack.frontend_params(layout, cfg, dirs))
+    shared = stack.shared_params(layout, cfg, dirs)
+    if shared:
+        p["shared"] = shared
 
-    if cfg.family in (Family.DENSE, Family.VLM):
-        block = dense_block_params_for(layout, cfg, dirs)
-        if layout.n_stages > 1:
-            # pipeline: (pp, layers_per_stage, ...) with the stage dim
-            # sharded over 'pp' — each pipeline group holds 1/pp of depth
-            _check_pipeline_support(cfg, layout)
-            p["blocks"] = pp_mod.stage_stack_tree(block, cfg.n_layers, layout)
-        else:
-            p["blocks"] = stack_tree(block, cfg.n_layers)
-    elif layout.n_stages > 1:
-        _check_pipeline_support(cfg, layout)
-    elif cfg.family == Family.MOE:
-        fk, nmoe = moe_layer_counts(cfg)
-        if fk:
-            p["dense_blocks"] = stack_tree(
-                dense_block_params_for(layout, cfg, dirs,
-                                       d_ff=cfg.moe.dense_ff or cfg.d_ff), fk)
-        p["moe_blocks"] = stack_tree(moe_block_params(layout, cfg, dirs), nmoe)
-    elif cfg.family == Family.HYBRID:
-        p["mamba"] = stack_tree(mamba2.mamba_params(layout, cfg, dirs),
-                                cfg.n_layers)
-        if cfg.ssm.attn_every:
-            p["shared_attn"] = B.dense_block_params(layout, cfg, dirs)
-    elif cfg.family == Family.SSM:
-        n_m = sum(n for k, n in xlstm_plan(cfg) if k == "m")
-        n_s = cfg.n_layers - n_m
-        p["mlstm"] = stack_tree(xlstm.mlstm_params(layout, cfg, dirs), n_m)
-        if n_s:
-            p["slstm"] = stack_tree(xlstm.slstm_params(layout, cfg, dirs), n_s)
-    elif cfg.family == Family.AUDIO:
-        p["encoder"] = encdec.encoder_params(layout, cfg, dirs)
-        p["dec_blocks"] = stack_tree(encdec.decoder_block_params(layout, cfg, dirs),
-                                     cfg.n_layers)
+    if layout.n_stages > 1:
+        reason = registry.pipeline_unsupported_reason(cfg, layout.n_stages)
+        if reason:
+            raise ValueError(reason)
+        # (pp, slots, ...) stage slabs, stage dim sharded over 'pp' — each
+        # pipeline group holds only its own slice of the depth
+        p["stack"] = registry.pipeline_stack_params(stack, cfg, layout, dirs)
     else:
-        raise ValueError(cfg.family)
+        p["stack"] = registry.stack_params(stack, cfg, layout, dirs)
 
     p["ln_f"] = B.make_norm_params(layout, cfg, dirs)
     p["head"] = weight_param(layout, dirs, d, cfg.vocab, kind="first",
@@ -145,9 +73,9 @@ def abstract_params(cfg: ModelConfig, layout: Layout):
             "ln_h": B.make_norm_params(layout, cfg, dirs),
             "ln_e": B.make_norm_params(layout, cfg, dirs),
             "proj": Param((2 * d, d), P(dirs.out_ax, None)),  # noswap proj
-            "block": dense_block_params_for(layout, cfg, dirs,
-                                            d_ff=(cfg.moe.dense_ff if cfg.moe
-                                                  else cfg.d_ff)),
+            "block": registry.attn_block_params(
+                layout, cfg, dirs,
+                d_ff=(cfg.moe.dense_ff if cfg.moe else cfg.d_ff)),
         }
     return p
 
@@ -165,10 +93,10 @@ def param_counts(cfg: ModelConfig):
     total = count_params(tree)
     active = total
     if cfg.moe:
-        blocks = tree.get("moe_blocks", {})
+        moe_blocks = tree.get("stack", {}).get("moe", {})
         routed = sum(p.size for k in ("w1", "w2", "w3")
                      for p in jax.tree.leaves(
-                         blocks.get("moe", {}).get(k), is_leaf=is_param)
+                         moe_blocks.get("moe", {}).get(k), is_leaf=is_param)
                      if is_param(p))
         active = total - int(routed * (cfg.moe.n_experts - cfg.moe.top_k)
                              / cfg.moe.n_experts)
@@ -176,287 +104,104 @@ def param_counts(cfg: ModelConfig):
 
 
 # ---------------------------------------------------------------------------
-# Block application (single layer, dispatching on family/kind)
+# Pipelined forward (pp > 1, train only — any registered family)
 # ---------------------------------------------------------------------------
-def apply_moe_block(layout, cfg, dirs, x, p, positions, *, decode=False,
-                    cache=None, return_kv=False):
-    h = B.apply_norm(cfg, x, p["ln1"])
-    if "mla" in p:
-        a, new_cache = mla.mla_apply(layout, cfg, dirs, h, p["mla"], positions,
-                                     decode=decode, cache=cache)
-    else:
-        a, new_cache = B.attn_apply(layout, cfg, dirs, h, p["attn"], positions,
-                                    window=cfg.window, decode=decode,
-                                    cache=cache, return_kv=return_kv)
-    x = x + a
-    h = B.apply_norm(cfg, x, p["ln2"])
-    y, aux = moe_mod.moe_apply(layout, cfg, dirs, h, p["moe"], decode=decode)
-    return x + y, new_cache, aux
+def forward_pipelined(cfg: ModelConfig, layout: Layout, params, batch):
+    """Pipelined train forward: microbatched 1F1B-style schedule over the
+    'pp' stage axis.  Numerically equivalent to the pp=1 path on the same
+    global batch (equal-sized microbatches, token-count-weighted mean of
+    per-microbatch means, aux losses carried through the stages)."""
+    reason = registry.pipeline_unsupported_reason(cfg, layout.n_stages)
+    if reason:
+        raise ValueError(reason)
+    stack = registry.get_stack(cfg.family)
+    dirs = entry_dirs()
+    m = max(layout.microbatches, 1)
 
+    # frontend pinned to stage 0: embed (+ modality prelude) the whole batch
+    # in the entry layout once (tables replicated along 'pp', cube-sharded
+    # as usual), then split into the microbatch feed
+    x, ctx = stack.frontend(layout, cfg, dirs, params, batch, mode="train")
+    labels, mask = stack.labels(cfg, batch)
+    Bg, S = x.shape[0], x.shape[1]
+    if Bg % m:
+        raise ValueError(f"global batch {Bg} not divisible by microbatches {m}")
+    Bm = Bg // m
+    x_mbs = x.reshape(m, Bm, S, -1)
+    labs = labels.reshape(m, Bm, labels.shape[1])
+    msks = mask.reshape(m, Bm, mask.shape[1])
+    ctx_mbs = jax.tree.map(lambda a: a.reshape(m, Bm, *a.shape[1:]), ctx)
+    positions = jnp.broadcast_to(jnp.arange(S), (Bm, S))
 
-def apply_dense_block(layout, cfg, dirs, x, p, positions, *, decode=False,
-                      cache=None, causal=True, return_kv=False):
-    if "mla" in p:
-        h = B.apply_norm(cfg, x, p["ln1"])
-        a, new_cache = mla.mla_apply(layout, cfg, dirs, h, p["mla"], positions,
-                                     decode=decode, cache=cache)
-        x = x + a
-        h = B.apply_norm(cfg, x, p["ln2"])
-        x = x + B.mlp_apply(layout, cfg, dirs, h, p["mlp"], decode=decode)
-        return x, new_cache
-    return B.dense_block_apply(layout, cfg, dirs, x, p, positions,
-                               decode=decode, cache=cache, causal=causal,
-                               return_kv=return_kv)
+    info = registry.pipeline_info(stack, cfg, layout.n_stages)
+    stage_fn = registry.make_stage_fn(stack, cfg, layout, dirs, info,
+                                      positions, params.get("shared", {}),
+                                      remat=cfg.remat)
+    stage_params = {"stack": params["stack"]}
+    if not info.homogeneous:
+        stage_params["sel"] = jnp.asarray(info.selectors, jnp.int32)
 
+    def collect_fn(acc, last, ctx_last, aux_last, mb_idx):
+        # head pinned to the last stage; warm-up ticks (mb_idx < 0) carry
+        # pipeline garbage and are masked out of the loss entirely.  Each
+        # microbatch mean is re-weighted by its valid-token count so the
+        # total is the global token mean, exactly as the pp=1 path computes
+        xent_sum, aux_sum, w_sum = acc
+        valid = (mb_idx >= 0).astype(F32)
+        mb = jnp.clip(mb_idx, 0, m - 1)
+        lab = lax.dynamic_index_in_dim(labs, mb, 0, keepdims=False)
+        msk = lax.dynamic_index_in_dim(msks, mb, 0, keepdims=False) * valid
+        h = B.apply_norm(cfg, last, params["ln_f"])
+        w = jnp.sum(msk)
+        mb_xent = chunked_head_loss(cfg, layout, dirs, h,
+                                    jnp.maximum(lab, 0), msk, params["head"])
+        return (xent_sum + w * mb_xent, aux_sum + w * aux_last["aux"],
+                w_sum + w)
 
-# ---------------------------------------------------------------------------
-# Stack runners (scan over stacked params; optional cache thread-through)
-# ---------------------------------------------------------------------------
-def _scan_stack(block_fn, x, stacked_params, caches=None, remat=False,
-                with_aux=False):
-    """block_fn(x, layer_params, layer_cache) -> (x, new_cache, aux?)."""
-    def f(carry, xs):
-        x, aux_acc = carry
-        bp, cache = xs if caches is not None else (xs, None)
-        if with_aux:
-            x, new_cache, aux = block_fn(x, bp, cache)
-            aux_acc = aux_acc + aux
-        else:
-            x, new_cache = block_fn(x, bp, cache)
-        out = new_cache if caches is not None else None
-        return (x, aux_acc), out
-
-    if remat:
-        f = jax.checkpoint(f)
-    xs = (stacked_params, caches) if caches is not None else stacked_params
-    (x, aux), new_caches = jax.lax.scan(f, (x, jnp.zeros((), F32)), xs)
-    return x, new_caches, aux
-
-
-def _tree_slice(tree, s, e):
-    return jax.tree.map(lambda a: a[s:e], tree)
-
-
-def _tree_concat(trees):
-    return jax.tree.map(lambda *xs: jnp.concatenate(xs, axis=0), *trees)
+    xent_sum, aux_sum, w_sum = pp_mod.pipeline_schedule(
+        layout, x_mbs=x_mbs, stage_params=stage_params, stage_fn=stage_fn,
+        collect_fn=collect_fn,
+        collect_init=(jnp.zeros((), F32), jnp.zeros((), F32),
+                      jnp.zeros((), F32)),
+        act_p=act_spec(layout, dirs), ctx_mbs=ctx_mbs,
+        ctx_specs=stack.ctx_specs(layout, cfg, dirs),
+        aux_init={"aux": jnp.zeros((), F32)})
+    w_sum = jnp.maximum(w_sum, 1.0)
+    xent, aux = xent_sum / w_sum, aux_sum / w_sum
+    return xent + aux, {"xent": xent, "aux": aux}
 
 
 # ---------------------------------------------------------------------------
 # Forward
 # ---------------------------------------------------------------------------
-def _embed(cfg, layout, dirs, params, batch, decode=False):
-    tokens = batch["token" if decode else "tokens"]
-    x = embed_lookup(layout, dirs, tokens, params["embed"], decode=decode)
-    if cfg.emb_scale_sqrt_d:
-        x = x * math.sqrt(cfg.d_model)
-    return x
-
-
-def _check_pipeline_support(cfg: ModelConfig, layout: Layout):
-    if cfg.family != Family.DENSE:
-        raise NotImplementedError(
-            f"pipeline parallelism (pp={layout.n_stages}) currently supports "
-            f"the dense decoder family only, got {cfg.family}")
-    layout.stage_layers(cfg.n_layers)          # divisibility check
-    if cfg.mtp:
-        raise NotImplementedError("mtp head not supported with pp > 1")
-
-
-def forward_pipelined(cfg: ModelConfig, layout: Layout, params, batch):
-    """Pipelined train forward: microbatched 1F1B-style schedule over the
-    'pp' stage axis.  Numerically equivalent to the pp=1 path on the same
-    global batch (equal-sized microbatches, mean-of-means loss)."""
-    _check_pipeline_support(cfg, layout)
-    dirs = entry_dirs()
-    m = max(layout.microbatches, 1)
-    tokens, labels = batch["tokens"], batch["labels"]
-    Bg, S = tokens.shape
-    if Bg % m:
-        raise ValueError(f"global batch {Bg} not divisible by microbatches {m}")
-    Bm = Bg // m
-
-    # embedding pinned to stage 0: embed the whole batch in the entry layout
-    # once (table replicated along 'pp', cube-sharded as usual), then split
-    # into the microbatch feed
-    x = _embed(cfg, layout, dirs, params, batch)
-    x_mbs = x.reshape(m, Bm, S, -1)
-    labs = labels.reshape(m, Bm, S)
-    positions = jnp.broadcast_to(jnp.arange(S), (Bm, S))
-    remat = cfg.remat
-
-    fn = lambda h, bp, c: apply_dense_block(layout, cfg, dirs, h, bp,
-                                            positions)
-
-    def stage_fn(h, stage_p):
-        h, _, _ = _scan_stack(fn, h, stage_p, remat=remat)
-        return h
-
-    def collect_fn(acc, last, mb_idx):
-        # head pinned to the last stage; warm-up ticks (mb_idx < 0) carry
-        # pipeline garbage and are masked out of the loss entirely.  Each
-        # microbatch mean is re-weighted by its valid-token count so the
-        # total is the global token mean, exactly as the pp=1 path computes
-        loss_sum, w_sum = acc
-        valid = (mb_idx >= 0).astype(F32)
-        lab = lax.dynamic_index_in_dim(labs, jnp.clip(mb_idx, 0, m - 1), 0,
-                                       keepdims=False)
-        h = B.apply_norm(cfg, last, params["ln_f"])
-        mask = (lab >= 0).astype(F32) * valid
-        w = jnp.sum(mask)
-        mb_loss = chunked_head_loss(cfg, layout, dirs, h,
-                                    jnp.maximum(lab, 0), mask, params["head"])
-        return (loss_sum + w * mb_loss, w_sum + w)
-
-    loss_sum, w_sum = pp_mod.pipeline_schedule(
-        layout, x_mbs=x_mbs, stage_params=params["blocks"],
-        stage_fn=stage_fn, collect_fn=collect_fn,
-        collect_init=(jnp.zeros((), F32), jnp.zeros((), F32)),
-        act_p=act_spec(layout, dirs))
-    loss = loss_sum / jnp.maximum(w_sum, 1.0)
-    return loss, {"xent": loss, "aux": jnp.zeros((), F32)}
-
-
 def forward(cfg: ModelConfig, layout: Layout, params, batch, *, mode: str,
             cache=None):
     """mode: 'train' -> (loss, metrics); 'prefill' -> (last_logits, cache);
     'decode' -> (logits, cache)."""
     if layout.n_stages > 1:
         if mode != "train":
-            raise NotImplementedError(
-                f"pp={layout.n_stages} supports mode='train' only (serve "
-                f"with a pp=1 layout); got {mode!r}")
+            from ..core.plan import pipeline_mode_error
+            raise ValueError(pipeline_mode_error(layout.n_stages, mode))
         return forward_pipelined(cfg, layout, params, batch)
+    stack = registry.get_stack(cfg.family)
     dirs = entry_dirs()
     decode = mode == "decode"
     remat = cfg.remat and mode == "train"
 
-    # ---- input embedding (+ modality frontends) ----
-    if cfg.family == Family.AUDIO and not decode:
-        enc = encdec.encoder_apply(layout, cfg, dirs, batch["frames"],
-                                   params["encoder"], remat=remat)
-    x = _embed(cfg, layout, dirs, params, batch, decode=decode)
-    if cfg.family == Family.VLM and not decode:
-        vis = batch["patch_embeds"].astype(x.dtype)
-        x = jnp.concatenate([vis, x], axis=1)
-        x = wsc(x, layout.sharding(act_spec(layout, dirs)))
-
+    # ---- frontend (embedding + modality prelude) ----
+    x, ctx = stack.frontend(layout, cfg, dirs, params, batch, mode=mode)
     S = x.shape[1]
     if decode:
         positions = batch["pos"][:, None]                      # (B, 1)
     else:
         positions = jnp.broadcast_to(jnp.arange(S), (x.shape[0], S))
 
-    aux = jnp.zeros((), F32)
-    new_cache: Dict[str, Any] = {}
-
-    # ---- body ----
+    # ---- body: the registered layer plan ----
     collect = mode == "prefill" and cfg.mla is None
-    if cfg.family in (Family.DENSE, Family.VLM):
-        fn = lambda x, bp, c: apply_dense_block(
-            layout, cfg, dirs, x, bp, positions, decode=decode, cache=c,
-            return_kv=collect)
-        x, nc, _ = _scan_stack(fn, x, params["blocks"],
-                               caches=cache["layers"] if decode else None,
-                               remat=remat)
-        if decode or collect:
-            new_cache["layers"] = nc
-
-    elif cfg.family == Family.MOE:
-        fk, nmoe = moe_layer_counts(cfg)
-        if fk:
-            fn = lambda x, bp, c: apply_dense_block(
-                layout, cfg, dirs, x, bp, positions, decode=decode, cache=c)
-            x, nc, _ = _scan_stack(fn, x, params["dense_blocks"],
-                                   caches=cache["dense"] if decode else None,
-                                   remat=remat)
-            if decode:
-                new_cache["dense"] = nc
-        fn = lambda x, bp, c: apply_moe_block(
-            layout, cfg, dirs, x, bp, positions, decode=decode, cache=c,
-            return_kv=collect)
-        x, nc, aux = _scan_stack(fn, x, params["moe_blocks"],
-                                 caches=cache["moe"] if decode else None,
-                                 remat=remat, with_aux=True)
-        if decode or collect:
-            new_cache["moe"] = nc
-
-    elif cfg.family == Family.HYBRID:
-        segs = hybrid_plan(cfg)
-        m_done = s_done = 0
-        m_caches, s_caches = [], []
-        for n, has_attn in segs:
-            mp = _tree_slice(params["mamba"], m_done, m_done + n)
-            mc = _tree_slice(cache["mamba"], m_done, m_done + n) if decode else None
-            fn = lambda x, bp, c: mamba2.mamba_apply(
-                layout, cfg, dirs, x, bp, positions, decode=decode, cache=c)
-            x, nc, _ = _scan_stack(fn, x, mp, caches=mc, remat=remat)
-            if decode:
-                m_caches.append(nc)
-            m_done += n
-            if has_attn and "shared_attn" in params:
-                sc = (jax.tree.map(lambda a: a[s_done], cache["shared"])
-                      if decode else None)
-                shared_fn = functools.partial(
-                    B.dense_block_apply, layout, cfg, dirs,
-                    positions=positions, decode=decode, cache=sc,
-                    window=cfg.window)
-                blk = (lambda xx, pp: shared_fn(xx, pp))
-                if remat:
-                    blk = jax.checkpoint(blk)
-                x, nkv = blk(x, params["shared_attn"])
-                if decode:
-                    s_caches.append(jax.tree.map(lambda a: a[None], nkv))
-                s_done += 1
-        if decode:
-            new_cache["mamba"] = _tree_concat(m_caches)
-            if s_caches:
-                new_cache["shared"] = _tree_concat(s_caches)
-
-    elif cfg.family == Family.SSM:
-        m_done = s_done = 0
-        m_caches, s_caches = [], []
-        for kind, n in xlstm_plan(cfg):
-            if kind == "m":
-                mp = _tree_slice(params["mlstm"], m_done, m_done + n)
-                mc = _tree_slice(cache["mlstm"], m_done, m_done + n) if decode else None
-                fn = lambda x, bp, c: xlstm.mlstm_apply(
-                    layout, cfg, dirs, x, bp, positions, decode=decode, cache=c)
-                x, nc, _ = _scan_stack(fn, x, mp, caches=mc, remat=remat)
-                if decode:
-                    m_caches.append(nc)
-                m_done += n
-            else:
-                sp = _tree_slice(params["slstm"], s_done, s_done + n)
-                sc = _tree_slice(cache["slstm"], s_done, s_done + n) if decode else None
-                fn = lambda x, bp, c: xlstm.slstm_apply(
-                    layout, cfg, dirs, x, bp, positions, decode=decode, cache=c)
-                x, nc, _ = _scan_stack(fn, x, sp, caches=sc, remat=remat)
-                if decode:
-                    s_caches.append(nc)
-                s_done += n
-        if decode:
-            new_cache["mlstm"] = _tree_concat(m_caches)
-            if s_caches:
-                new_cache["slstm"] = _tree_concat(s_caches)
-
-    elif cfg.family == Family.AUDIO:
-        if decode:
-            def fn(x, bp_and_kv, c):
-                bp, (ck, cv) = bp_and_kv
-                return encdec.decoder_block_apply(
-                    layout, cfg, dirs, x, bp, positions, (ck, cv),
-                    decode=True, cache=c)
-            x, nc, _ = _scan_stack(
-                fn, x, (params["dec_blocks"],
-                        (cache["cross"]["k"], cache["cross"]["v"])),
-                caches=cache["layers"], remat=False)
-            new_cache["layers"] = nc
-            new_cache["cross"] = cache["cross"]
-        else:
-            def fn(x, bp, c):
-                return encdec.decoder_block_apply(
-                    layout, cfg, dirs, x, bp, positions, enc, decode=False)
-            x, _, _ = _scan_stack(fn, x, params["dec_blocks"], remat=remat)
+    x, new_cache, aux = registry.run_stack(
+        stack, layout, cfg, dirs, x, params, positions, ctx=ctx,
+        shared=params.get("shared", {}), mode=mode, cache=cache, remat=remat,
+        collect_kv=collect)
 
     # ---- head ----
     x = B.apply_norm(cfg, x, params["ln_f"])
@@ -468,22 +213,14 @@ def forward(cfg: ModelConfig, layout: Layout, params, batch, *, mode: str,
 
     if mode == "prefill":
         # last-position logits only (cheap head); new_cache carries the
-        # per-layer rope'd (k, v) stack for the serving hand-off
+        # per-layer rope'd (k, v) stacks for the serving hand-off
         last = x[:, -1:]
         last = wsc(last, layout.sharding(act_spec_decode(layout, dirs)))
         logits, _ = plinear(layout, dirs, last, params["head"], kind="first",
                             decode=True)
         return logits[:, 0], new_cache
 
-    labels = batch["labels"]
-    if cfg.family == Family.VLM:
-        pad = jnp.zeros((x.shape[0], batch["patch_embeds"].shape[1]),
-                        labels.dtype)
-        labels = jnp.concatenate([pad, labels], axis=1)
-        mask = jnp.concatenate([jnp.zeros_like(pad, F32),
-                                jnp.ones(batch["labels"].shape, F32)], axis=1)
-    else:
-        mask = (labels >= 0).astype(F32)
+    labels, mask = stack.labels(cfg, batch)
     loss = chunked_head_loss(cfg, layout, dirs, x, jnp.maximum(labels, 0),
                              mask, params["head"])
     metrics = {"xent": loss, "aux": aux}
@@ -494,10 +231,6 @@ def forward(cfg: ModelConfig, layout: Layout, params, batch, *, mode: str,
         loss = loss + 0.1 * mtp_loss
         metrics["mtp"] = mtp_loss
     return loss, metrics
-
-
-def _prefill_cache_placeholder():
-    return {}
 
 
 def head_loss_chunks(cfg: ModelConfig, layout: Layout, S: int) -> int:
@@ -552,6 +285,7 @@ def chunked_head_loss(cfg: ModelConfig, layout: Layout, dirs: Dirs, x,
 def _mtp_loss(cfg, layout, dirs, params, h, batch, positions):
     """DeepSeek multi-token prediction: predict t+2 from (h_t, emb_{t+1})."""
     from ..core import ops3d
+    from ..core.linear3d import embed_lookup
     p = params["mtp"]
     tokens, labels = batch["tokens"], batch["labels"]
     nxt = jnp.concatenate([tokens[:, 1:], tokens[:, -1:]], axis=1)
@@ -564,7 +298,8 @@ def _mtp_loss(cfg, layout, dirs, params, h, batch, positions):
     else:
         z = jnp.einsum("bsh,hf->bsf", cat, p["proj"],
                        preferred_element_type=F32).astype(cat.dtype)
-    z, _ = apply_dense_block(layout, cfg, dirs, z, p["block"], positions)
+    z, _, _ = registry.attn_block_apply(layout, cfg, dirs, z, p["block"],
+                                        positions, ctx={}, shared={})
     z = B.apply_norm(cfg, z, params["ln_f"])
     lab2 = jnp.concatenate([labels[:, 1:], -jnp.ones_like(labels[:, -1:])],
                            axis=1)
@@ -577,45 +312,9 @@ def _mtp_loss(cfg, layout, dirs, params, h, batch, positions):
 # Caches
 # ---------------------------------------------------------------------------
 def abstract_cache(cfg: ModelConfig, layout: Layout, batch: int, length: int):
+    stack = registry.get_stack(cfg.family)
     dirs = entry_dirs()
-    L = min(length, cfg.window) if cfg.window else length
-    c: Dict[str, Any] = {}
-    if cfg.family in (Family.DENSE, Family.VLM):
-        if cfg.mla is not None:
-            c["layers"] = stack_tree(mla.mla_cache_init(layout, cfg, dirs,
-                                                        batch, L), cfg.n_layers)
-        else:
-            c["layers"] = stack_tree(B.kv_cache_init(layout, cfg, dirs, batch, L),
-                                     cfg.n_layers)
-    elif cfg.family == Family.MOE:
-        fk, nmoe = moe_layer_counts(cfg)
-        one = (mla.mla_cache_init(layout, cfg, dirs, batch, L)
-               if cfg.mla is not None
-               else B.kv_cache_init(layout, cfg, dirs, batch, L))
-        if fk:
-            c["dense"] = stack_tree(one, fk)
-        c["moe"] = stack_tree(one, nmoe)
-    elif cfg.family == Family.HYBRID:
-        c["mamba"] = stack_tree(mamba2.mamba_cache_init(layout, cfg, dirs, batch),
-                                cfg.n_layers)
-        if cfg.ssm.attn_every:
-            n_shared = sum(1 for _, a in hybrid_plan(cfg) if a)
-            attn_len = min(L, cfg.window) if cfg.window else L
-            c["shared"] = stack_tree(B.kv_cache_init(layout, cfg, dirs, batch,
-                                                     attn_len), n_shared)
-    elif cfg.family == Family.SSM:
-        n_m = sum(n for k, n in xlstm_plan(cfg) if k == "m")
-        n_s = cfg.n_layers - n_m
-        c["mlstm"] = stack_tree(xlstm.mlstm_cache_init(layout, cfg, dirs, batch),
-                                n_m)
-        if n_s:
-            c["slstm"] = stack_tree(xlstm.slstm_cache_init(layout, cfg, dirs,
-                                                           batch), n_s)
-    elif cfg.family == Family.AUDIO:
-        c["layers"] = stack_tree(B.kv_cache_init(layout, cfg, dirs, batch, L),
-                                 cfg.n_layers)
-        c["cross"] = encdec.cross_kv_cache_init(layout, cfg, dirs, batch)
-    return c
+    return registry.stack_cache(stack, cfg, layout, dirs, batch, length)
 
 
 # ---------------------------------------------------------------------------
@@ -623,6 +322,7 @@ def abstract_cache(cfg: ModelConfig, layout: Layout, batch: int, length: int):
 # ---------------------------------------------------------------------------
 def input_specs(cfg: ModelConfig, layout: Layout, shape: ShapeConfig):
     """ShapeDtypeStructs (with shardings) for every model input."""
+    stack = registry.get_stack(cfg.family)
     dirs = entry_dirs()
     Bn, S = shape.global_batch, shape.seq_len
     i32 = jnp.int32
@@ -639,28 +339,9 @@ def input_specs(cfg: ModelConfig, layout: Layout, shape: ShapeConfig):
         cache = abstract_arrays(abstract_cache(cfg, layout, Bn, S), layout)
         return batch, cache
 
-    if cfg.family == Family.VLM:
-        nv = cfg.n_vision_tokens
-        batch = {
-            "tokens": sds((Bn, S - nv), i32, tok_spec),
-            "patch_embeds": sds((Bn, nv, cfg.d_model), jnp.bfloat16,
-                                P(layout.batch_spec(), None, None)),
-        }
-    elif cfg.family == Family.AUDIO:
-        enc = cfg.encoder
-        batch = {
-            "frames": sds((Bn, enc.n_frames, cfg.d_model), jnp.bfloat16,
-                          act_spec(layout, dirs)),
-            "tokens": sds((Bn, S), i32, tok_spec),
-        }
-    else:
-        batch = {"tokens": sds((Bn, S), i32, tok_spec)}
-
+    batch = stack.inputs(cfg, layout, shape, sds, tok_spec)
     if shape.kind == "train":
-        if cfg.family == Family.VLM:
-            batch["labels"] = sds((Bn, S - cfg.n_vision_tokens), i32, tok_spec)
-        else:
-            batch["labels"] = sds((Bn, S), i32, tok_spec)
+        batch["labels"] = sds((Bn, stack.label_len(cfg, S)), i32, tok_spec)
     return (batch,)
 
 

@@ -11,8 +11,9 @@ from typing import Any, Dict, Tuple
 import jax
 import jax.numpy as jnp
 
-from ..config import Family, ModelConfig, OptimConfig
+from ..config import ModelConfig, OptimConfig
 from ..core.topology import Layout
+from ..models import registry as model_registry
 from ..models import transformer
 from ..optim import make_optimizer
 
@@ -52,6 +53,7 @@ def make_train_step(cfg: ModelConfig, layout: Layout, opt_cfg: OptimConfig):
     update = make_optimizer(opt_cfg, layout, param_tree=abstract)
     m = max(layout.microbatches, 1)
     pipelined = layout.n_stages > 1
+    stack = model_registry.get_stack(cfg.family)
 
     zshards = None
     if layout.effective_zero_stage() >= 2:
@@ -86,12 +88,9 @@ def make_train_step(cfg: ModelConfig, layout: Layout, opt_cfg: OptimConfig):
                 gacc, lacc, macc, wacc = acc
                 # weight = the forward pass's loss-mask total: sum of per-mb
                 # (mean * count) over the total count reproduces the global
-                # token mean.  VLM masks vision positions but counts every
-                # text position (transformer.forward), so mirror that here.
-                if cfg.family == Family.VLM:
-                    w = jnp.float32(mb["labels"].size)
-                else:
-                    w = jnp.sum((mb["labels"] >= 0).astype(jnp.float32))
+                # token mean.  Each family's BlockStack declares its own
+                # mask accounting (VLM counts every text position).
+                w = stack.mb_weight(cfg, mb)
                 (l, met), g = jax.value_and_grad(
                     loss_fn, has_aux=True)(params, mb)
                 # ZeRO-2: each microbatch's grads reduce-scatter onto the dp

@@ -51,7 +51,7 @@ from repro.config import OptimConfig, reduced
 from repro.configs.registry import get
 from repro.core.params import init_params
 from repro.core.plan import ParallelPlan
-from repro.models import transformer
+from repro.models import registry, transformer
 from repro.optim.optimizers import opt_state_abstract
 from repro.train.step import make_train_step
 
@@ -77,21 +77,19 @@ def batches(step):
     labs = labs.at[:2, S // 2:].set(-1)
     return {"tokens": toks, "labels": labs}
 
-# one canonical init (pp=1 tree); the pp=2 tree is the same numbers with the
-# stacked layer dim reshaped (L, ...) -> (pp, L/pp, ...)
+# one canonical init (pp=1 tree); the pp=2 tree is the same numbers re-cut
+# into (pp, slots, ...) stage slabs by the registry
 lay_ref = plans["pp1"].build()
 params0 = transformer.init(cfg, lay_ref, jax.random.key(0))
 
 traj = {}
 for name, plan in plans.items():
-    plan.validate(n_layers=cfg.n_layers, global_batch=B)
+    plan.validate(n_layers=cfg.n_layers, global_batch=B, model=cfg)
     lay = plan.build()
     params = dict(params0)
     if plan.n_stages > 1:
-        pp = plan.n_stages
-        params["blocks"] = jax.tree.map(
-            lambda a: a.reshape(pp, a.shape[0] // pp, *a.shape[1:]),
-            params0["blocks"])
+        params["stack"] = registry.repartition_stack(cfg, params0["stack"],
+                                                     lay_ref, lay)
     opt_state = init_params(opt_state_abstract(
         transformer.abstract_params(cfg, lay), lay, opt_cfg),
         jax.random.key(1))

@@ -82,9 +82,16 @@ def test_stage_bounds():
 
 
 def test_stage_layers_divisibility():
+    # Layout.stage_layers (uniform slabs) still enforces divisibility ...
+    lay = single_device_layout("3d")
+    lay.stage_layers(4)
     plan = ParallelPlan(n_stages=2, microbatches=4)
-    with pytest.raises(ValueError, match="not divisible"):
+    # ... but plans accept non-divisible depth (non-uniform stages, with a
+    # warning); only depth < n_stages is a hard error
+    with pytest.warns(UserWarning, match="non-uniform"):
         plan.validate(n_layers=3)
+    with pytest.raises(ValueError, match="at least one layer"):
+        plan.validate(n_layers=1)
     plan.validate(n_layers=4)
 
 
