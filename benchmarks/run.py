@@ -1,6 +1,6 @@
 """Benchmark harness — one function per paper table/figure + roofline.
 
-``python -m benchmarks.run [table1|table2|comm|kernels|minirun|ppsweep|zerosweep|roofline|all]``
+``python -m benchmarks.run [table1|table2|comm|kernels|minirun|ppsweep|zerosweep|servesweep|roofline|all]``
 
 Prints ``name,us_per_call,derived`` CSV rows per the harness contract:
 derived entries carry the model-based quantity (step time / comm bytes /
@@ -395,6 +395,78 @@ def zerosweep():
 
 
 # ---------------------------------------------------------------------------
+# Serve sweep: continuous-batching engine on 8 host devices — 1d/2d/3d
+# strategies x batch sizes, chunked prefill vs seed-style token-per-step
+# ---------------------------------------------------------------------------
+SERVESWEEP_SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import sys, json
+sys.path.insert(0, %(src)r)
+import jax
+from repro.config import reduced
+from repro.configs.registry import get
+from repro.core.plan import ParallelPlan
+from repro.models import transformer
+from repro.serve import Engine, Request
+
+cfg = reduced(get("qwen3-4b"))
+PROMPT_LEN, MAX_NEW, N_REQ = 24, 8, 8
+
+def reqs():
+    return [Request(uid=i, prompt=[2 + (i + j) %% 17 for j in range(PROMPT_LEN)],
+                    max_new=MAX_NEW) for i in range(N_REQ)]
+
+out = {}
+# 1d/2d cap at model=4: the reduced config's 4 kv heads bound the 1-D
+# head sharding, and 2-D needs a square grid; spare devices go to dp
+cases = [("3d", 8, 4, True), ("2d", 4, 4, True), ("1d", 4, 4, True),
+         ("3d", 8, 8, True), ("3d", 8, 4, False)]
+for strat, n_model, bs, chunked in cases:
+    n_dp = 8 // n_model
+    plan = ParallelPlan(n_dp=n_dp, n_model=n_model, strategy=strat)
+    plan.validate(n_layers=cfg.n_layers, model=cfg, mode="serve")
+    lay = plan.build()
+    params = transformer.init(cfg, lay, jax.random.key(0))
+    eng = Engine(cfg, lay, params, batch_size=bs, max_len=64,
+                 chunked_prefill=chunked)
+    eng.run(reqs())                       # warm-up: compile every bucket
+    stats = eng.run(reqs())
+    tag = "%%s|model%%d|bs%%d|%%s" %% (
+        strat, n_model, bs, "chunked" if chunked else "seqprefill")
+    out[tag] = {"tok_per_s": stats["tok_per_s"],
+                "ttft_p50_s": stats["ttft_p50_s"],
+                "tpot_p50_s": stats["tpot_p50_s"],
+                "steps": stats["steps"]}
+print("RESULT " + json.dumps(out))
+"""
+
+
+def servesweep():
+    env = dict(os.environ, PYTHONPATH=os.path.join(ROOT, "src"))
+    proc = subprocess.run(
+        [sys.executable, "-c",
+         SERVESWEEP_SCRIPT % {"src": os.path.join(ROOT, "src")}],
+        env=env, capture_output=True, text=True, timeout=3000)
+    for line in proc.stdout.splitlines():
+        if line.startswith("RESULT "):
+            res = json.loads(line[len("RESULT "):])
+            for name, r in res.items():
+                _row(f"servesweep|{name}|8hostdev", "",
+                     f"tok_per_s={r['tok_per_s']:.1f} "
+                     f"ttft_p50_s={r['ttft_p50_s']:.3f} "
+                     f"tpot_p50_s={r['tpot_p50_s']:.4f} steps={r['steps']}")
+            base = res.get("3d|model8|bs4|seqprefill", {}).get("tok_per_s")
+            new = res.get("3d|model8|bs4|chunked", {}).get("tok_per_s")
+            if base and new:
+                _row("servesweep|chunked_vs_seed_speedup", "",
+                     f"{new/base:.2f}x (criterion: >= 2x on prompts >= 16)")
+            return
+    print(proc.stderr[-2000:], file=sys.stderr)
+    _row("servesweep", "", "FAILED")
+
+
+# ---------------------------------------------------------------------------
 # Roofline from the dry-run results
 # ---------------------------------------------------------------------------
 def roofline(path=None):
@@ -425,6 +497,8 @@ def main() -> None:
         ppsweep()
     if which in ("zerosweep", "all"):
         zerosweep()
+    if which in ("servesweep", "all"):
+        servesweep()
     if which in ("roofline", "all"):
         roofline()
 

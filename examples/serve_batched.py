@@ -1,8 +1,14 @@
-"""Serving example: continuous-batching engine over a 3-D-parallel model.
+"""Serving example: the continuous-batching engine over a 3-D-parallel model.
 
-Eight requests with different prompt lengths share four decode slots; the
-engine refills finished slots from the queue (slot-based continuous
-batching).  Greedy decoding, deterministic outputs.
+Eight requests with different prompt lengths share four decode slots.  The
+dense family serves through the paged KV cache: each freshly admitted
+group of prompts is prefilled in ONE chunked-prefill step (whole prompts,
+not one token per step), its keys/values land in fixed-size pool blocks
+via per-slot block tables, and completed requests return their blocks to
+the free list so the scheduler can refill the slot.  One request rides the
+priority queue and is served before the FIFO backlog.  Greedy decoding,
+bit-deterministic outputs; the run ends with the TTFT/TPOT/throughput
+report.
 """
 import os
 import sys
@@ -16,22 +22,24 @@ from repro.configs.registry import get
 from repro.core.topology import single_device_layout
 from repro.models import transformer
 from repro.serve import Engine, Request
+from repro.serve.metrics import format_summary
 
 
 def main():
     layout = single_device_layout("3d")
     cfg = reduced(get("qwen3-4b"))
     params = transformer.init(cfg, layout, jax.random.key(0))
-    eng = Engine(cfg, layout, params, batch_size=4, max_len=96)
+    eng = Engine(cfg, layout, params, batch_size=4, max_len=96,
+                 block_size=16, seed=0)
 
     reqs = [Request(uid=i, prompt=list(range(2, 2 + 3 + i % 5)),
-                    max_new=8 + 2 * (i % 3)) for i in range(8)]
+                    max_new=8 + 2 * (i % 3),
+                    priority=1 if i == 7 else 0) for i in range(8)]
     stats = eng.run(reqs, progress=lambda s: print(f"  step {s}"))
     for r in reqs:
-        print(f"req {r.uid}: prompt={r.prompt} -> out={r.out}")
-    tput = stats["tokens"] / stats["wall_s"]
-    print(f"{stats['tokens']} tokens in {stats['wall_s']:.1f}s "
-          f"({tput:.1f} tok/s, {stats['steps']} engine steps)")
+        mark = " (priority)" if r.priority else ""
+        print(f"req {r.uid}{mark}: prompt={r.prompt} -> out={r.out}")
+    print(format_summary(stats))
     assert all(r.done for r in reqs)
 
 

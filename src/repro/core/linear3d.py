@@ -103,7 +103,13 @@ def plinear(layout: Layout, dirs: Dirs, x, w, b=None, *, kind: str = "first",
             y = ops3d.matmul3d(layout, dirs.in_ax, dirs.out_ax, x, w, shard_f)
         ndirs = dirs.swap()
     elif layout.strategy == "2d":
-        y = ops2d.matmul2d(layout, x, w) if shard_f else _gspmd_mm(x, w)
+        if decode:
+            # decode activations are (B, 1, H): too short to SUMMA-shard the
+            # sequence over 'y'; lower to a GSPMD matmul in the decode layout
+            y = _gspmd_mm(x, w)
+            y = wsc(y, layout.sharding(P(layout.batch_spec(), None, "z")))
+        else:
+            y = ops2d.matmul2d(layout, x, w) if shard_f else _gspmd_mm(x, w)
         ndirs = dirs
     else:  # 1d
         if shard_f:

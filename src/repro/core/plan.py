@@ -41,13 +41,20 @@ from .topology import Layout, factor_model_axis, make_layout
 
 def pipeline_mode_error(n_stages: int, mode: str) -> Optional[str]:
     """Plan-time (and forward-time backstop) message for pp with a
-    non-train mode; None when the combination is legal."""
+    non-train mode; None when the combination is legal.
+
+    Serving plans (mode='serve', and the per-call 'prefill'/'decode'
+    modes they decompose into) are accepted for every registered family at
+    n_stages=1 — the only remaining unsupported composition is pipeline
+    stages at inference time, named precisely here."""
     if n_stages > 1 and mode != "train":
         return (
             f"n_stages={n_stages} with mode={mode!r}: the 1F1B pipeline is a "
             "training-only schedule (microbatches stream through the "
-            "stages); for prefill/decode, rebuild the plan with n_stages=1 "
-            "and fold those devices into n_model or n_dp")
+            "stages); serving — prefill, decode, and the continuous-"
+            "batching engine — supports every family at n_stages=1: "
+            "rebuild the plan with n_stages=1 and fold those devices into "
+            "n_model or n_dp")
     return None
 
 
@@ -106,7 +113,8 @@ class ParallelPlan:
         every registered family pipelines, so the remaining rejections are
         precise (mtp head under pp, too few blocks for the stage count).
         ``mode`` rejects serving plans with pp > 1 at plan time instead of
-        deep inside the forward."""
+        deep inside the forward; ``mode='serve'`` with n_stages=1 is legal
+        for every family (``launch/serve.py`` validates with it)."""
         if self.n_stages < 1 or self.microbatches < 1:
             raise ValueError("n_stages and microbatches must be >= 1")
         err = pipeline_mode_error(self.n_stages, mode)

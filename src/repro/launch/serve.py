@@ -1,11 +1,17 @@
 """Serving launcher: ``python -m repro.launch.serve --arch qwen3-4b --reduced
---requests 8`` — builds the engine, submits synthetic requests, reports
-throughput.  The same entrypoint drives a TPU slice (set --dp/--model).
+--requests 8`` — builds the continuous-batching engine (paged KV cache +
+chunked prefill for the attention families), submits synthetic requests and
+reports the serving metrics (TTFT / TPOT p50/p95, tok/s).  The same
+entrypoint drives a TPU slice (set --dp/--model); the plan is validated
+with mode='serve' so illegal compositions (pipeline stages at inference)
+fail before any device work.  Exits nonzero when no tokens were produced,
+so CI smoke runs can assert liveness by exit code.
 """
 from __future__ import annotations
 
 import argparse
 import os
+import sys
 
 
 def main(argv=None):
@@ -20,6 +26,22 @@ def main(argv=None):
     ap.add_argument("--requests", type=int, default=8)
     ap.add_argument("--max-new", type=int, default=16)
     ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--top-k", type=int, default=0,
+                    help="sample from the k most likely tokens (0 = off)")
+    ap.add_argument("--top-p", type=float, default=0.0,
+                    help="nucleus sampling mass (0 = off)")
+    ap.add_argument("--seed", type=int, default=0,
+                    help="engine PRNG seed (temperature > 0 reproducible)")
+    ap.add_argument("--priority", type=int, default=0,
+                    help="submit every Nth request on the priority queue "
+                         "(0 = all FIFO)")
+    ap.add_argument("--block-size", type=int, default=16,
+                    help="paged KV cache block size (tokens per block)")
+    ap.add_argument("--prefill-chunk", type=int, default=4096,
+                    help="max padded tokens per chunked-prefill step")
+    ap.add_argument("--no-chunked-prefill", action="store_true",
+                    help="seed-style sequential prefill (one prompt token "
+                         "per engine step) — the throughput baseline")
     ap.add_argument("--ckpt-dir", default="")
     ap.add_argument("--inference-opt", action="store_true",
                     help="x-replicated decode weights (zero per-token gathers)")
@@ -34,19 +56,24 @@ def main(argv=None):
     import jax
     from repro.config import reduced
     from repro.configs.registry import get
-    from repro.core.topology import make_layout
-    from repro.models import transformer
+    from repro.core.plan import ParallelPlan
+    from repro.models import registry, transformer
     from repro.serve import Engine, Request
+    from repro.serve.metrics import format_summary
     from repro.checkpoint import store
 
     cfg = get(args.arch)
     if args.reduced:
         cfg = reduced(cfg)
-    layout = make_layout(1, args.dp, args.model, args.strategy)
+    plan = ParallelPlan(n_dp=args.dp, n_model=args.model,
+                        strategy=args.strategy)
+    plan.validate(n_layers=cfg.n_layers, model=cfg, mode="serve")
+    layout = plan.build()
     if args.inference_opt:
         layout = dataclasses.replace(layout, inference_opt=True)
     print(f"serving {cfg.arch}{' (reduced)' if args.reduced else ''} on "
-          f"{layout.n_devices} devices, cube={layout.cube}")
+          f"{layout.n_devices} devices, cube={layout.cube}, "
+          f"cache={registry.serve_cache_mode(cfg)}")
 
     params = transformer.init(cfg, layout, jax.random.key(0))
     if args.ckpt_dir:
@@ -58,15 +85,23 @@ def main(argv=None):
             print(f"restored checkpoint step {last}")
 
     eng = Engine(cfg, layout, params, batch_size=args.batch_size,
-                 max_len=args.max_len, temperature=args.temperature)
+                 max_len=args.max_len, temperature=args.temperature,
+                 top_k=args.top_k, top_p=args.top_p, seed=args.seed,
+                 block_size=args.block_size,
+                 prefill_chunk=args.prefill_chunk,
+                 chunked_prefill=not args.no_chunked_prefill)
     reqs = [Request(uid=i, prompt=[2 + (i + j) % 17 for j in range(3 + i % 5)],
-                    max_new=args.max_new) for i in range(args.requests)]
+                    max_new=args.max_new,
+                    priority=(1 if args.priority and i % args.priority == 0
+                              else 0))
+            for i in range(args.requests)]
     stats = eng.run(reqs)
     for r in reqs[:4]:
-        print(f"  req {r.uid}: {len(r.prompt)} prompt -> {r.out}")
-    print(f"{stats['tokens']} tokens / {stats['wall_s']:.1f}s = "
-          f"{stats['tokens']/stats['wall_s']:.1f} tok/s "
-          f"({stats['steps']} engine steps)")
+        tag = f" [rejected: {r.error}]" if r.error else ""
+        print(f"  req {r.uid}: {len(r.prompt)} prompt -> {r.out}{tag}")
+    print(format_summary(stats))
+    if stats["tokens"] <= 0:
+        sys.exit("no tokens generated")
 
 
 if __name__ == "__main__":

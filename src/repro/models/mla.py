@@ -83,8 +83,13 @@ def _up(layout: Layout, dirs: Dirs, x, w, decode: bool):
 
 
 def mla_apply(layout: Layout, cfg: ModelConfig, dirs: Dirs, x, p, positions,
-              *, decode=False, cache=None):
-    """x in block entry layout; returns (out, new_cache)."""
+              *, decode=False, cache=None, collect_kv=False):
+    """x in block entry layout; returns (out, new_cache).
+
+    ``collect_kv`` (prefill only): additionally return the compressed
+    latent stream ``(c_kv, k_rope)`` — post-norm / post-rope, exactly the
+    values ``_mla_decode`` caches — so the serving engine can hand a whole
+    prefilled prompt off to the paged decode cache in one step."""
     m, nh, dn, dr, dv = _m(cfg)
     B, S = x.shape[0], x.shape[1]
     hx = layout.size(_head_axes(layout, dirs)[1])
@@ -128,7 +133,7 @@ def mla_apply(layout: Layout, cfg: ModelConfig, dirs: Dirs, x, p, positions,
         out = attention(layout, _with_full_kv(cfg), dirs, q_full, k, v,
                         causal=True)
         out = out.reshape(B, S, -1)
-        new_cache = None
+        new_cache = (c_kv, k_rope) if collect_kv else None
 
     y, _ = plinear(layout, dirs.swap(), out, p["w_o"], kind="second",
                    decode=decode)

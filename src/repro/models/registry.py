@@ -109,6 +109,13 @@ class BlockStack:
     label_len: Callable = None          # cfg, seq -> label sequence length
     act_bytes: Callable = None          # (cfg, layout, b, s) -> per-layer bytes
     carry_bytes: Callable = None        # (cfg, layout, b) -> pipeline carry bytes
+    # serving-cache hook: "paged" families (text-frontend attention stacks:
+    # dense kv / MLA latent, every cache leaf length-indexed) serve through
+    # the block-table pool in serve/kvcache.py with chunked prefill;
+    # "state" families (SSM / xLSTM / hybrid recurrent state, and the
+    # modality frontends) keep O(1)-per-slot contiguous caches and prefill
+    # sequentially through the decode path.
+    serve_cache: str = "state"
 
     def __post_init__(self):
         defaults = {
@@ -230,7 +237,8 @@ def _attn_block_apply(layout, cfg, dirs, x, p, positions, *, ctx, shared,
     if "mla" in p:
         h = B.apply_norm(cfg, x, p["ln1"])
         a, new_cache = mla.mla_apply(layout, cfg, dirs, h, p["mla"], positions,
-                                     decode=decode, cache=cache)
+                                     decode=decode, cache=cache,
+                                     collect_kv=collect_kv)
         x = x + a
         h = B.apply_norm(cfg, x, p["ln2"])
         x = x + B.mlp_apply(layout, cfg, dirs, h, p["mlp"], decode=decode)
@@ -282,7 +290,8 @@ def _moe_block_apply(layout, cfg, dirs, x, p, positions, *, ctx, shared,
     h = B.apply_norm(cfg, x, p["ln1"])
     if "mla" in p:
         a, new_cache = mla.mla_apply(layout, cfg, dirs, h, p["mla"], positions,
-                                     decode=decode, cache=cache)
+                                     decode=decode, cache=cache,
+                                     collect_kv=collect_kv)
     else:
         a, new_cache = B.attn_apply(layout, cfg, dirs, h, p["attn"], positions,
                                     window=cfg.window, decode=decode,
@@ -480,11 +489,11 @@ _XDEC_KIND = BlockKind("xdec", encdec.decoder_block_params, _xdec_apply,
 REGISTRY: Dict[Family, BlockStack] = {
     Family.DENSE: BlockStack(
         family=Family.DENSE, kinds={"dense": _DENSE_KIND},
-        layer_plan=_plan_dense),
+        layer_plan=_plan_dense, serve_cache="paged"),
     Family.MOE: BlockStack(
         family=Family.MOE,
         kinds={"dense": _MOE_DENSE_KIND, "moe": _MOE_KIND},
-        layer_plan=_plan_moe, act_bytes=_moe_act_bytes),
+        layer_plan=_plan_moe, act_bytes=_moe_act_bytes, serve_cache="paged"),
     Family.HYBRID: BlockStack(
         family=Family.HYBRID,
         kinds={"mamba": _MAMBA_KIND, "attn": _SHARED_ATTN_KIND},
@@ -518,6 +527,35 @@ def get_stack(family: Family) -> BlockStack:
         raise ValueError(
             f"no BlockStack registered for family {family!r}; known: "
             f"{sorted(f.value for f in REGISTRY)}") from None
+
+
+# ---------------------------------------------------------------------------
+# Serving-cache hooks (consumed by serve/engine.py + serve/kvcache.py)
+# ---------------------------------------------------------------------------
+def serve_cache_mode(cfg: ModelConfig) -> str:
+    """'paged' when this config serves through the block-table KV pool
+    (dense / MLA attention stacks), else 'state' (recurrent state slots or
+    modality frontends -> contiguous caches, sequential prefill)."""
+    return get_stack(cfg.family).serve_cache
+
+
+def pack_prefill_cache(cfg: ModelConfig, collected, pos2d):
+    """Shape the kv streams collected by ``transformer.prefill`` into
+    decode-cache updates aligned with ``stack_cache``'s per-kind leaves.
+
+    ``collected``: {kind: (a, b)} stacked ``(n, B, S, ...)`` pairs — rope'd
+    (k, v) for dense attention, (c_kv, k_rope) latents for MLA.  ``pos2d``:
+    (B, S) int32 logical positions (-1 on padding lanes).  Returns
+    {kind: {leaf: (n, B, S, ...)}} including the 'pos' leaf, ready for
+    ``kvcache.scatter_prefill``."""
+    keys = ("c_kv", "k_rope") if cfg.mla is not None else ("k", "v")
+    out = {}
+    for kname, (a, b) in collected.items():
+        n = a.shape[0]
+        pos = jnp.broadcast_to(pos2d[None].astype(jnp.int32),
+                               (n, *pos2d.shape))
+        out[kname] = {keys[0]: a, keys[1]: b, "pos": pos}
+    return out
 
 
 # ---------------------------------------------------------------------------

@@ -197,7 +197,7 @@ def forward(cfg: ModelConfig, layout: Layout, params, batch, *, mode: str,
         positions = jnp.broadcast_to(jnp.arange(S), (x.shape[0], S))
 
     # ---- body: the registered layer plan ----
-    collect = mode == "prefill" and cfg.mla is None
+    collect = mode == "prefill"
     x, new_cache, aux = registry.run_stack(
         stack, layout, cfg, dirs, x, params, positions, ctx=ctx,
         shared=params.get("shared", {}), mode=mode, cache=cache, remat=remat,
@@ -213,7 +213,8 @@ def forward(cfg: ModelConfig, layout: Layout, params, batch, *, mode: str,
 
     if mode == "prefill":
         # last-position logits only (cheap head); new_cache carries the
-        # per-layer rope'd (k, v) stacks for the serving hand-off
+        # per-layer rope'd (k, v) stacks (MLA: (c_kv, k_rope) latents) for
+        # the serving hand-off
         last = x[:, -1:]
         last = wsc(last, layout.sharding(act_spec_decode(layout, dirs)))
         logits, _ = plinear(layout, dirs, last, params["head"], kind="first",
@@ -306,6 +307,45 @@ def _mtp_loss(cfg, layout, dirs, params, h, batch, positions):
     mask = (lab2 >= 0).astype(F32)
     return chunked_head_loss(cfg, layout, dirs, z, jnp.maximum(lab2, 0),
                              mask, params["head"])
+
+
+# ---------------------------------------------------------------------------
+# Serving prefill
+# ---------------------------------------------------------------------------
+def prefill(cfg: ModelConfig, layout: Layout, params, batch):
+    """Batched whole-prompt prefill: the serving engine's chunked-prefill
+    entry (one device call processes a whole padded prompt group instead of
+    one token per global step).
+
+    ``batch``: {"tokens": (B, S) int32 right-padded prompts, "length": (B,)
+    int32 true prompt lengths (0 marks an inactive padding row)}.  Returns
+    ``(logits, kv)``: per-row logits at the last *valid* position (B, V) —
+    right-padding is safe under causal attention, garbage past a row's
+    length never reaches positions before it — plus the collected per-kind
+    kv streams ((n_layers, B, S, ...) stacked, rope'd; MLA: compressed
+    latents) that ``registry.pack_prefill_cache`` shapes for the paged
+    decode cache.  Only meaningful for 'paged' serve families
+    (``registry.serve_cache_mode``); recurrent state has no chunked form.
+    """
+    if layout.n_stages > 1:
+        from ..core.plan import pipeline_mode_error
+        raise ValueError(pipeline_mode_error(layout.n_stages, "prefill"))
+    stack = registry.get_stack(cfg.family)
+    dirs = entry_dirs()
+    x, ctx = stack.frontend(layout, cfg, dirs, params, batch, mode="prefill")
+    S = x.shape[1]
+    positions = jnp.broadcast_to(jnp.arange(S), (x.shape[0], S))
+    x, kv, _ = registry.run_stack(
+        stack, layout, cfg, dirs, x, params, positions, ctx=ctx,
+        shared=params.get("shared", {}), mode="prefill", cache=None,
+        remat=False, collect_kv=True)
+    x = B.apply_norm(cfg, x, params["ln_f"])
+    idx = jnp.clip(batch["length"].astype(jnp.int32) - 1, 0, S - 1)
+    last = jnp.take_along_axis(x, idx[:, None, None], axis=1)    # (B, 1, H)
+    last = wsc(last, layout.sharding(act_spec_decode(layout, dirs)))
+    logits, _ = plinear(layout, dirs, last, params["head"], kind="first",
+                        decode=True)
+    return logits[:, 0], kv
 
 
 # ---------------------------------------------------------------------------

@@ -1,1 +1,10 @@
+"""Production serving subsystem: paged KV cache, chunked prefill,
+continuous-batching scheduler, on-device sampling, serving metrics.
+
+Public surface: ``Engine`` / ``Request`` (engine.py) plus the submodules
+``kvcache`` / ``scheduler`` / ``sampling`` / ``metrics`` — see
+docs/serving.md for the architecture.
+"""
 from .engine import Engine, Request
+
+__all__ = ["Engine", "Request"]

@@ -1,8 +1,29 @@
-"""Batched serving engine: prefill + decode with a KV cache, greedy or
-temperature sampling, simple continuous-batching request scheduler.
+"""Continuous-batching serving engine over the 3-D cube.
 
-Works for the dense-attention families (prefill hand-off implemented); the
-recurrent families decode from their state caches.
+Architecture (docs/serving.md has the full picture):
+
+  * ``scheduler.Scheduler``  — FIFO + priority queues, admission control,
+    slot refill, prefill grouping (host-side policy).
+  * ``kvcache.PagedKVCache`` — block-table paged KV pool for the 'paged'
+    families (dense / MLA attention, per ``registry.serve_cache_mode``);
+    'state' families (SSM / xLSTM / hybrid, modality frontends) keep the
+    contiguous per-slot caches (O(1) recurrent state per slot).
+  * ``sampling.make_sampler`` — on-device greedy / temperature / top-k /
+    top-p under one engine-owned, per-step-split PRNG key: temperature = 0
+    is bit-deterministic, temperature > 0 reproducible from ``seed``.
+  * ``metrics.ServeMetrics`` — TTFT / TPOT / throughput / queue depth.
+
+Engine steps come in two shapes.  A *prefill* step (paged families) pushes
+a whole padded group of freshly admitted prompts through the jitted
+``transformer.prefill`` — one device call per prompt group instead of one
+per token — scatters the returned kv into the paged pool and emits each
+request's first token.  A *decode* step advances every in-flight slot by
+one token: gather the block-table views, run the decode forward, write the
+new entries back to their blocks, sample on device.  Prefill and decode
+steps interleave: newly admitted work prefills at the next step boundary
+while resident requests keep decoding.  'state' families (no chunked form
+for recurrent state) prefill sequentially through the decode path, exactly
+one prompt token per step, inside the same scheduler/metrics machinery.
 """
 from __future__ import annotations
 
@@ -14,10 +35,15 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from ..config import Family, ModelConfig
+from ..config import ModelConfig
 from ..core.params import init_params
 from ..core.topology import Layout
-from ..models import transformer
+from ..models import registry, transformer
+from . import kvcache, sampling
+from .metrics import ServeMetrics
+from .scheduler import Scheduler
+
+F32 = jnp.float32
 
 
 @dataclasses.dataclass
@@ -25,92 +51,269 @@ class Request:
     uid: int
     prompt: List[int]
     max_new: int = 32
+    priority: int = 0               # > 0 drains before the FIFO queue
     out: List[int] = dataclasses.field(default_factory=list)
     done: bool = False
+    error: str = ""                 # admission-rejection reason (out stays [])
+    # prompt tokens already fed on the sequential-prefill path (a real
+    # dataclass field — not bolted on from outside)
+    _fed: int = 0
 
 
 class Engine:
-    """Slot-based continuous batching: fixed decode batch, per-slot position
-    tracking; finished slots are refilled from the queue each step."""
+    """Slot-based continuous batching: fixed decode batch of ``batch_size``
+    slots, refilled from the scheduler queues as requests complete."""
 
     def __init__(self, cfg: ModelConfig, layout: Layout, params, *,
-                 batch_size: int = 8, max_len: int = 512, temperature: float = 0.0):
+                 batch_size: int = 8, max_len: int = 512,
+                 temperature: float = 0.0, top_k: int = 0, top_p: float = 0.0,
+                 seed: int = 0, block_size: int = 16,
+                 n_blocks: Optional[int] = None, prefill_chunk: int = 4096,
+                 chunked_prefill: bool = True):
         self.cfg, self.layout, self.params = cfg, layout, params
         self.B, self.max_len = batch_size, max_len
         self.temperature = temperature
-        self.cache = init_params(
-            transformer.abstract_cache(cfg, layout, batch_size, max_len),
-            jax.random.key(0))
+        self.paged = registry.serve_cache_mode(cfg) == "paged"
+        self.chunked = chunked_prefill and self.paged
+        self.sampler = sampling.make_sampler(temperature, top_k, top_p)
+        self._key = jax.random.key(seed)
+        self.scheduler = Scheduler(batch_size, max_len,
+                                   chunk_tokens=prefill_chunk)
+        self.metrics = ServeMetrics()
+
         self.pos = np.zeros(batch_size, np.int32)
         self.slots: List[Optional[Request]] = [None] * batch_size
-        self.queue: List[Request] = []
+        self.steps = 0
 
-        def decode_step(params, batch, cache):
-            logits, cache = transformer.forward(cfg, layout, params, batch,
-                                                mode="decode", cache=cache)
-            return logits, cache
+        dtype = next(x.dtype for x in jax.tree.leaves(params)
+                     if jnp.issubdtype(x.dtype, jnp.floating))
+        if self.paged:
+            self.kv = kvcache.PagedKVCache(cfg, layout, batch_size, max_len,
+                                           block=block_size,
+                                           n_blocks=n_blocks, dtype=dtype)
+            self.pool = self.kv.init_pool()
+            self._build_paged()
+        else:
+            tree = kvcache.cache_with_dtype(
+                transformer.abstract_cache(cfg, layout, batch_size, max_len),
+                dtype)
+            self.cache = init_params(tree, jax.random.key(0))
+            self._build_contiguous()
 
-        self._decode = jax.jit(decode_step, donate_argnums=(2,))
+    # ------------------------------------------------------------------
+    # Jitted device steps
+    # ------------------------------------------------------------------
+    def _build_paged(self):
+        cfg, layout, sampler = self.cfg, self.layout, self.sampler
+        blk, L = self.kv.block, self.kv.view_len
 
+        def decode_step(params, pool, tok, pos, tables, active, key):
+            view = kvcache.gather_view(pool, tables, blk)
+            logits, new_view = transformer.forward(
+                cfg, layout, params, {"token": tok, "pos": pos},
+                mode="decode", cache=view)
+            rows = jnp.arange(tok.shape[0])
+            slot = pos % L
+            phys = tables[rows, slot // blk] * blk + slot % blk
+            phys = jnp.where(active, phys, blk + rows % blk)   # idle -> trash
+            pool = kvcache.scatter_decode(pool, new_view, slot, phys)
+            return sampler(logits.astype(F32), key), pool
+
+        def prefill_step(params, pool, tokens, length, phys_map, key):
+            logits, kv = transformer.prefill(
+                cfg, layout, params, {"tokens": tokens, "length": length})
+            p = jnp.arange(tokens.shape[1])[None, :]
+            pos2d = jnp.where(p < length[:, None], p, -1)
+            updates = registry.pack_prefill_cache(cfg, kv, pos2d)
+            pool = kvcache.scatter_prefill(pool, updates, phys_map)
+            return sampler(logits.astype(F32), key), pool
+
+        self._decode = jax.jit(decode_step, donate_argnums=(1,))
+        self._prefill = jax.jit(prefill_step, donate_argnums=(1,))
+        self._clear = jax.jit(kvcache.clear_positions, donate_argnums=(0,))
+
+    def _build_contiguous(self):
+        cfg, layout, sampler = self.cfg, self.layout, self.sampler
+
+        def decode_step(params, cache, tok, pos, key):
+            logits, cache = transformer.forward(
+                cfg, layout, params, {"token": tok, "pos": pos},
+                mode="decode", cache=cache)
+            return sampler(logits.astype(F32), key), cache
+
+        def reset_rows(cache, mask):
+            # wipe a reused slot's state (recurrent carries, kv positions)
+            # so a new request never sees its predecessor's context
+            def r(leaf):
+                empty = (jnp.full_like(leaf, -1)
+                         if jnp.issubdtype(leaf.dtype, jnp.integer)
+                         else jnp.zeros_like(leaf))
+                m = mask.reshape((1, -1) + (1,) * (leaf.ndim - 2))
+                return jnp.where(m, empty, leaf)
+            return jax.tree.map(r, cache)
+
+        self._decode = jax.jit(decode_step, donate_argnums=(1,))
+        self._reset = jax.jit(reset_rows, donate_argnums=(0,))
+
+    def _split_key(self):
+        self._key, sub = jax.random.split(self._key)
+        return sub
+
+    # ------------------------------------------------------------------
+    # Request lifecycle
+    # ------------------------------------------------------------------
     def submit(self, req: Request):
-        self.queue.append(req)
+        self.metrics.submit(req.uid)
+        if not self.scheduler.submit(req):
+            self.metrics.reject(req.uid)
 
-    def _fill_slots(self):
-        for i in range(self.B):
-            if self.slots[i] is None and self.queue:
-                req = self.queue.pop(0)
-                self.slots[i] = req
-                req._fed = 0            # tokens of the prompt fed so far
-                self.pos[i] = 0
+    def _can_place(self, req: Request, slot: int) -> bool:
+        if not self.paged:
+            return True
+        return self.kv.can_admit(len(req.prompt) + req.max_new)
 
+    def _admit(self):
+        free = [i for i in range(self.B) if self.slots[i] is None]
+        placed = self.scheduler.fill(free, self._can_place)
+        for slot, req in placed:
+            self.slots[slot] = req
+            self.pos[slot] = 0
+            req._fed = 0
+            if self.paged:
+                ok = self.kv.admit(slot, len(req.prompt) + req.max_new)
+                assert ok, "can_place admitted a request the pool rejects"
+        if placed and self.paged:
+            # invalidate recycled blocks before anything reads them
+            idx = self.kv.clear_targets([s for s, _ in placed])
+            self.pool = self._clear(self.pool, idx)
+        elif placed:
+            mask = np.zeros((self.B,), bool)
+            for s, _ in placed:
+                mask[s] = True
+            self.cache = self._reset(self.cache, jnp.asarray(mask))
+        if not self.chunked:
+            # sequential prefill starts feeding immediately, no prefill queue
+            self.scheduler.pending_prefill.clear()
+        if not placed and not self.scheduler.pending_prefill \
+                and self.scheduler.has_queued() \
+                and all(s is None for s in self.slots):
+            # nothing running and the queue head can never be placed (needs
+            # more blocks than the whole pool): reject instead of spinning
+            req = (self.scheduler.prio or self.scheduler.fifo).popleft()
+            req.error = ("request needs more KV blocks than the pool holds "
+                         f"(prompt {len(req.prompt)} + max_new {req.max_new})")
+            req.done = True
+            self.metrics.reject(req.uid)
+
+    def _finish(self, i: int):
+        req = self.slots[i]
+        req.done = True
+        self.slots[i] = None
+        if self.paged:
+            self.kv.release(i)
+        self.metrics.finish(req.uid)
+
+    # ------------------------------------------------------------------
+    # Steps
+    # ------------------------------------------------------------------
     def step(self):
-        """One global decode step: each live slot feeds either its next
-        prompt token (sequential prefill) or its last sampled token."""
-        self._fill_slots()
+        """One engine step: admit waiting work, then either one chunked
+        prefill group or one global decode tick."""
+        self._admit()
+        if self.chunked and self.scheduler.pending_prefill:
+            self._prefill_tick()
+            kind = "prefill"
+        else:
+            self._decode_tick()
+            kind = "decode"
+        self.metrics.observe_step(self.scheduler.queue_depth(), kind)
+        self.steps += 1
+
+    def _prefill_tick(self):
+        lens = {s: len(self.slots[s].prompt)
+                for s in self.scheduler.pending_prefill}
+        group, s_pad = self.scheduler.prefill_group(lens)
+        tokens = np.zeros((self.B, s_pad), np.int32)
+        length = np.zeros((self.B,), np.int32)
+        for s in group:
+            p = self.slots[s].prompt
+            tokens[s, :len(p)] = p
+            length[s] = len(p)
+        phys_map = self.kv.prefill_phys_map({s: lens[s] for s in group}, s_pad)
+        tok, self.pool = self._prefill(self.params, self.pool,
+                                       jnp.asarray(tokens),
+                                       jnp.asarray(length), phys_map,
+                                       self._split_key())
+        tok = np.asarray(jax.device_get(tok))
+        for s in group:
+            req = self.slots[s]
+            self.pos[s] = len(req.prompt)
+            req._fed = len(req.prompt)
+            req.out.append(int(tok[s]))
+            self.metrics.token(req.uid)
+            if len(req.out) >= req.max_new or self.pos[s] >= self.max_len - 1:
+                self._finish(s)
+
+    def _decode_tick(self):
         tok = np.zeros((self.B, 1), np.int32)
+        active = np.zeros((self.B,), bool)
+        pending = set(self.scheduler.pending_prefill)
         for i, req in enumerate(self.slots):
-            if req is None:
+            if req is None or i in pending:
                 continue
             if req._fed < len(req.prompt):
-                tok[i, 0] = req.prompt[req._fed]
+                tok[i, 0] = req.prompt[req._fed]     # sequential prefill
+                active[i] = True
             elif req.out:
                 tok[i, 0] = req.out[-1]
-        batch = {"token": jnp.asarray(tok),
-                 "pos": jnp.asarray(self.pos)}
-        logits, self.cache = self._decode(self.params, batch, self.cache)
-        logits = np.asarray(jax.device_get(logits), np.float32)
-
+                active[i] = True
+        if not active.any():
+            return
+        batch = (jnp.asarray(tok), jnp.asarray(self.pos))
+        if self.paged:
+            nxt, self.pool = self._decode(
+                self.params, self.pool, batch[0], batch[1],
+                self.kv.tables_device(), jnp.asarray(active),
+                self._split_key())
+        else:
+            nxt, self.cache = self._decode(self.params, self.cache,
+                                           batch[0], batch[1],
+                                           self._split_key())
+        nxt = np.asarray(jax.device_get(nxt))
         for i, req in enumerate(self.slots):
-            if req is None:
+            if req is None or not active[i]:
                 continue
             self.pos[i] += 1
             if req._fed < len(req.prompt):
                 req._fed += 1
                 if req._fed < len(req.prompt):
                     continue
-            nxt = self._sample(logits[i])
-            req.out.append(int(nxt))
+            req.out.append(int(nxt[i]))
+            self.metrics.token(req.uid)
             if len(req.out) >= req.max_new or self.pos[i] >= self.max_len - 1:
-                req.done = True
-                self.slots[i] = None
+                self._finish(i)
 
-    def _sample(self, logits: np.ndarray) -> int:
-        if self.temperature <= 0:
-            return int(logits.argmax())
-        p = logits / self.temperature
-        p = np.exp(p - p.max())
-        p /= p.sum()
-        return int(np.random.default_rng().choice(len(p), p=p))
+    # ------------------------------------------------------------------
+    def _busy(self) -> bool:
+        return (self.scheduler.has_queued()
+                or bool(self.scheduler.pending_prefill)
+                or any(s is not None for s in self.slots))
 
     def run(self, requests: List[Request], progress: Callable = None):
+        # per-run metrics: each run() reports exactly its own requests (and
+        # drops the previous run's tracking, so a long-lived engine doesn't
+        # accumulate per-request state across runs)
+        self.metrics = ServeMetrics()
         for r in requests:
             self.submit(r)
-        steps = 0
         t0 = time.time()
-        while self.queue or any(s is not None for s in self.slots):
+        start = self.steps
+        while self._busy():
             self.step()
-            steps += 1
-            if progress and steps % 16 == 0:
-                progress(steps)
-        return {"steps": steps, "wall_s": time.time() - t0,
-                "tokens": sum(len(r.out) for r in requests)}
+            if progress and (self.steps - start) % 16 == 0:
+                progress(self.steps)
+        wall = time.time() - t0
+        stats = self.metrics.summary(wall)
+        stats.update(steps=self.steps - start, wall_s=wall,
+                     tokens=sum(len(r.out) for r in requests))
+        return stats

@@ -1,0 +1,290 @@
+"""Paged KV cache: fixed-size blocks, per-slot block tables, free-list
+allocation, eviction on request completion.
+
+Contract
+--------
+The *pool* is the single device-resident store for every length-indexed
+decode cache of a paged family (dense kv, MLA latent): each leaf of the
+per-kind cache tree ``(n_layers, B, L, ...)`` becomes a pool leaf
+``(n_layers, n_blocks * block, ...)`` — the batch and length dims are
+replaced by one flat *physical* dim of ``n_blocks`` fixed-size blocks.
+Which physical block holds which ``(slot, logical position)`` pair is pure
+host-side bookkeeping (``PagedKVCache``: a free list plus one block table
+per engine slot); the device functions below are shape-stable pure pytree
+ops, safe to close over inside one jitted engine step:
+
+  * ``gather_view``      pool + tables -> the per-slot contiguous cache view
+                         ``(n_layers, B, L_view, ...)`` that
+                         ``transformer.forward(mode="decode")`` consumes
+                         unchanged (the decode ring modulus is the view
+                         length, so views are always whole blocks).
+  * ``scatter_decode``   write the one new entry per slot back to its block.
+  * ``scatter_prefill``  write a whole chunk of prefill kv per slot at once.
+  * ``clear_positions``  invalidate (pos = -1) freshly allocated blocks so a
+                         reused block never leaks a previous request's keys.
+
+Two physical blocks are reserved: block 0 is the *null* block — every
+unallocated block-table entry points at it, its positions stay -1 forever,
+so gathered views of unallocated regions are masked out of attention — and
+block 1 is the *trash* block, the write target for masked-out lanes
+(inactive slots, prompt padding); it is never referenced by any table.
+
+Sharding: pool leaves drop the cache's batch/length sharding (the physical
+dim is replicated over the data and sequence axes) and keep the trailing
+head sharding, so the gather/scatter ops are plain GSPMD gathers — no new
+shard_map regions (jax 0.4.37-safe; the attention islands inside
+``forward`` reshard the views to their own specs).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Dict, List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from ..config import ModelConfig
+from ..core.params import Param, init_params, is_param, tree_map_params
+from ..core.topology import Layout
+
+RESERVED = 2                      # block 0 = null (reads), block 1 = trash (writes)
+
+
+# ---------------------------------------------------------------------------
+# Host-side allocation
+# ---------------------------------------------------------------------------
+class BlockAllocator:
+    """Free-list allocator over ``n_blocks`` fixed-size blocks.
+
+    Blocks 0 and 1 are reserved (null / trash) and never handed out.
+    Invariants (enforced): a block is never handed out twice without an
+    intervening free, and only outstanding blocks may be freed.
+    """
+
+    def __init__(self, n_blocks: int):
+        if n_blocks <= RESERVED:
+            raise ValueError(f"need more than {RESERVED} blocks, got {n_blocks}")
+        self.n_blocks = n_blocks
+        self._free: List[int] = list(range(RESERVED, n_blocks))
+        self._used: set = set()
+
+    @property
+    def n_free(self) -> int:
+        return len(self._free)
+
+    def alloc(self, n: int) -> Optional[List[int]]:
+        """n blocks, or None (and no state change) when fewer are free."""
+        if n > len(self._free):
+            return None
+        blocks, self._free = self._free[:n], self._free[n:]
+        self._used.update(blocks)
+        return blocks
+
+    def free(self, blocks: Sequence[int]):
+        for b in blocks:
+            if b not in self._used:
+                raise ValueError(f"double free / foreign block {b}")
+            self._used.remove(b)
+        self._free.extend(blocks)
+
+    def check(self):
+        """Invariant: every non-reserved block is exactly free xor used."""
+        assert not (set(self._free) & self._used)
+        assert len(self._free) + len(self._used) == self.n_blocks - RESERVED
+
+
+# ---------------------------------------------------------------------------
+# Device-side pure pytree ops (safe to close over under jit)
+# ---------------------------------------------------------------------------
+def gather_view(pool, tables, block: int):
+    """pool leaves (n, n_blocks*block, ...) + tables (B, nb) ->
+    view leaves (n, B, nb*block, ...): the contiguous per-slot cache that
+    the decode forward consumes."""
+    flat = (tables[:, :, None] * block
+            + jnp.arange(block, dtype=tables.dtype)).reshape(tables.shape[0], -1)
+    return jax.tree.map(lambda leaf: leaf[:, flat], pool)
+
+
+def scatter_decode(pool, new_view, slot, phys):
+    """Write each slot's new entry (at view index ``slot``) back to its
+    physical position ``phys`` (both (B,) int32; masked lanes point phys at
+    the trash block)."""
+    rows = jnp.arange(slot.shape[0])
+
+    def s(pl, vw):
+        entry = vw[:, rows, slot]                       # (n, B, ...)
+        return pl.at[:, phys].set(entry.astype(pl.dtype))
+
+    return jax.tree.map(s, pool, new_view)
+
+
+def scatter_prefill(pool, updates, phys_map):
+    """Write whole prefill chunks: updates leaves (n, B, S, ...) land at
+    flat physical indices ``phys_map`` (B, S) (padding lanes -> trash)."""
+    flat = phys_map.reshape(-1)
+
+    def s(pl, up):
+        vals = up.reshape(up.shape[0], -1, *up.shape[3:])
+        return pl.at[:, flat].set(vals.astype(pl.dtype))
+
+    return jax.tree.map(s, pool, updates)
+
+
+def clear_positions(pool, idx):
+    """Invalidate integer (position) leaves at flat indices ``idx`` so
+    recycled blocks never leak a previous request's entries."""
+    flat = idx.reshape(-1)
+
+    def c(leaf):
+        if not jnp.issubdtype(leaf.dtype, jnp.integer):
+            return leaf
+        return leaf.at[:, flat].set(-1)
+
+    return jax.tree.map(c, pool)
+
+
+def cache_with_dtype(tree, dtype):
+    """Promote the floating leaves of an abstract cache tree to at least
+    ``dtype`` (so an f32-parameter engine gets an f32 kv cache and the
+    chunked-prefill hand-off stays bit-faithful to token-by-token decode);
+    leaves already wider — e.g. the f32 recurrent states — are kept."""
+    def one(p: Param):
+        if jnp.issubdtype(jnp.dtype(p.dtype), jnp.floating):
+            return dataclasses.replace(
+                p, dtype=jnp.promote_types(p.dtype, dtype))
+        return p
+    return tree_map_params(one, tree)
+
+
+# ---------------------------------------------------------------------------
+# The manager
+# ---------------------------------------------------------------------------
+class PagedKVCache:
+    """Host-side paged-cache bookkeeping for one engine.
+
+    Block math: the family's abstract cache has length ``L_abs``
+    (= min(max_len, window) for sliding-window archs).  Each slot's view is
+    ``nb = ceil(L_abs / block)`` whole blocks, so the view length (and the
+    decode ring modulus) is ``view_len = nb * block``.  A request needing
+    ``t`` cache entries occupies ``ceil(min(t, view_len) / block)`` blocks,
+    allocated at admission and freed when the request completes (eviction on
+    completion).  The pool holds ``n_blocks`` physical blocks (default:
+    2 reserved + full residency for every slot).
+    """
+
+    def __init__(self, cfg: ModelConfig, layout: Layout, batch_size: int,
+                 max_len: int, block: int = 16,
+                 n_blocks: Optional[int] = None, dtype=None):
+        from ..models import registry, transformer
+        stack = registry.get_stack(cfg.family)
+        dirs = transformer.entry_dirs()
+        abstract = registry.stack_cache(stack, cfg, layout, dirs, 1, max_len)
+        if not abstract:
+            raise ValueError(f"{cfg.arch}: no length-indexed cache to page")
+        lens = {leaf.shape[2] for leaf in
+                jax.tree.leaves(abstract, is_leaf=is_param)}
+        if len(lens) != 1:
+            raise ValueError(f"{cfg.arch}: mixed cache lengths {lens} — "
+                             "paged serving needs one common view length")
+        (l_abs,) = lens
+        self.block = block
+        self.blocks_per_slot = -(-l_abs // block)
+        self.view_len = self.blocks_per_slot * block
+        self.B = batch_size
+        self.n_blocks = n_blocks or (RESERVED
+                                     + batch_size * self.blocks_per_slot)
+        self.allocator = BlockAllocator(self.n_blocks)
+        self.tables = np.zeros((batch_size, self.blocks_per_slot), np.int32)
+        self._owned: List[List[int]] = [[] for _ in range(batch_size)]
+        self._abstract_pool = self._pool_params(abstract, dtype)
+
+    def _pool_params(self, abstract, dtype):
+        phys = self.n_blocks * self.block
+
+        def one(p: Param) -> Param:
+            entries = tuple(p.spec or ()) + (None,) * (len(p.shape)
+                                                       - len(p.spec or ()))
+            floating = jnp.issubdtype(jnp.dtype(p.dtype), jnp.floating)
+            return Param(
+                shape=(p.shape[0], phys, *p.shape[3:]),
+                spec=P(None, None, *entries[3:]),
+                dtype=(dtype or p.dtype) if floating else p.dtype,
+                init="zeros" if floating else "neg_ones")
+
+        return tree_map_params(one, abstract)
+
+    def init_pool(self):
+        """Materialize the zeroed pool (positions start at -1: every block,
+        including the null block, is invalid until written)."""
+        return init_params(self._abstract_pool, jax.random.key(0))
+
+    # ---- admission / eviction -------------------------------------------
+    def blocks_needed(self, n_tokens: int) -> int:
+        return -(-min(n_tokens, self.view_len) // self.block)
+
+    def can_admit(self, n_tokens: int) -> bool:
+        return self.allocator.n_free >= self.blocks_needed(n_tokens)
+
+    def admit(self, slot: int, n_tokens: int) -> bool:
+        """Reserve the slot's blocks for a request needing ``n_tokens``
+        cache entries; False (no state change) when the pool is exhausted."""
+        if self._owned[slot]:
+            raise ValueError(f"slot {slot} already holds blocks")
+        blocks = self.allocator.alloc(self.blocks_needed(n_tokens))
+        if blocks is None:
+            return False
+        self._owned[slot] = blocks
+        self.tables[slot, :] = 0
+        self.tables[slot, :len(blocks)] = blocks
+        return True
+
+    def release(self, slot: int):
+        """Eviction on completion: return the slot's blocks to the free list
+        and point its table back at the null block."""
+        if self._owned[slot]:
+            self.allocator.free(self._owned[slot])
+        self._owned[slot] = []
+        self.tables[slot, :] = 0
+
+    # ---- index computation (host) ---------------------------------------
+    def phys(self, slot: int, pos: int) -> int:
+        """Flat physical index of logical position ``pos`` for ``slot``
+        (ring over the view length, like the contiguous decode cache)."""
+        v = pos % self.view_len
+        return int(self.tables[slot, v // self.block]) * self.block \
+            + v % self.block
+
+    def tables_device(self):
+        return jnp.asarray(self.tables)
+
+    def trash_row(self, row: int) -> int:
+        return self.block + row % self.block
+
+    def prefill_phys_map(self, rows_len: Dict[int, int], s_pad: int) -> np.ndarray:
+        """(B, s_pad) flat physical targets for a prefill group: slot ``i``
+        with prompt length ``rows_len[i]`` keeps its last ``view_len``
+        positions (sliding-window ring); everything else -> trash."""
+        out = np.empty((self.B, s_pad), np.int64)
+        for i in range(self.B):
+            out[i, :] = self.trash_row(i)
+            n = rows_len.get(i, 0)
+            for p in range(max(0, n - self.view_len), min(n, s_pad)):
+                out[i, p] = self.phys(i, p)
+        return out
+
+    def clear_targets(self, slots: Sequence[int]) -> np.ndarray:
+        """(B, blocks_per_slot*block) flat indices whose positions must be
+        invalidated: the full allocated extent of the given slots; other
+        rows target the trash block."""
+        width = self.blocks_per_slot * self.block
+        out = np.empty((self.B, width), np.int64)
+        for i in range(self.B):
+            out[i, :] = self.trash_row(i)
+            if i in slots:
+                for j, b in enumerate(self._owned[i]):
+                    out[i, j * self.block:(j + 1) * self.block] = \
+                        np.arange(b * self.block, (b + 1) * self.block)
+        return out

@@ -1,0 +1,126 @@
+"""Serving metrics: TTFT / TPOT / throughput / queue depth.
+
+The engine calls the ``submit`` / ``first_token`` / ``token`` / ``finish``
+/ ``reject`` hooks as requests move through it and ``observe_step`` once
+per engine step; ``summary()`` reduces everything to a plain dict
+(p50/p95 latencies in seconds, tok/s, queue-depth histogram) and
+``format_summary`` renders the launcher's report.  Pure host-side
+bookkeeping — nothing here touches jax.
+
+Definitions:
+  * TTFT  — submit() to first_token() per request (queueing + prefill).
+  * TPOT  — (t_last - t_first) / (n_tokens - 1) per request with >= 2
+            generated tokens: the steady decode cadence.
+  * throughput — generated tokens / wall seconds over the whole run.
+"""
+from __future__ import annotations
+
+import time
+from typing import Dict, List, Optional
+
+import numpy as np
+
+
+def percentile(values: List[float], q: float) -> float:
+    """Nearest-rank percentile (0 when empty)."""
+    if not values:
+        return 0.0
+    return float(np.percentile(values, q, method="nearest"))
+
+
+def histogram(values: List[float], bins: int = 8):
+    """Equal-width histogram -> (edges [bins+1], counts [bins])."""
+    if not values:
+        return [0.0, 1.0], [0]
+    counts, edges = np.histogram(values, bins=bins)
+    return edges.tolist(), counts.tolist()
+
+
+class _Track:
+    __slots__ = ("t_submit", "t_first", "t_last", "n_tokens")
+
+    def __init__(self, t):
+        self.t_submit = t
+        self.t_first: Optional[float] = None
+        self.t_last: Optional[float] = None
+        self.n_tokens = 0
+
+
+class ServeMetrics:
+    def __init__(self, clock=time.perf_counter):
+        self._clock = clock
+        self._reqs: Dict[int, _Track] = {}
+        self.rejected = 0
+        self.completed = 0
+        self.queue_depths: List[int] = []
+        self.prefill_steps = 0
+        self.decode_steps = 0
+
+    # ---- request lifecycle ----
+    def submit(self, uid: int):
+        self._reqs[uid] = _Track(self._clock())
+
+    def reject(self, uid: int):
+        self.rejected += 1
+        self._reqs.pop(uid, None)
+
+    def token(self, uid: int, n: int = 1):
+        tr = self._reqs.get(uid)
+        if tr is None:
+            return
+        now = self._clock()
+        if tr.t_first is None:
+            tr.t_first = now
+        tr.t_last = now
+        tr.n_tokens += n
+
+    def finish(self, uid: int):
+        self.completed += 1
+
+    # ---- engine step ----
+    def observe_step(self, queue_depth: int, kind: str):
+        self.queue_depths.append(queue_depth)
+        if kind == "prefill":
+            self.prefill_steps += 1
+        else:
+            self.decode_steps += 1
+
+    # ---- reduction ----
+    def summary(self, wall_s: float) -> dict:
+        ttft = [t.t_first - t.t_submit for t in self._reqs.values()
+                if t.t_first is not None]
+        tpot = [(t.t_last - t.t_first) / (t.n_tokens - 1)
+                for t in self._reqs.values()
+                if t.t_first is not None and t.n_tokens > 1]
+        tokens = sum(t.n_tokens for t in self._reqs.values())
+        return {
+            "wall_s": wall_s,
+            "tokens": tokens,
+            "tok_per_s": tokens / wall_s if wall_s > 0 else 0.0,
+            "completed": self.completed,
+            "rejected": self.rejected,
+            "ttft_p50_s": percentile(ttft, 50),
+            "ttft_p95_s": percentile(ttft, 95),
+            "tpot_p50_s": percentile(tpot, 50),
+            "tpot_p95_s": percentile(tpot, 95),
+            "queue_depth_max": max(self.queue_depths, default=0),
+            "queue_depth_hist": histogram([float(q) for q in
+                                           self.queue_depths]),
+            "ttft_hist": histogram(ttft),
+            "tpot_hist": histogram(tpot),
+            "prefill_steps": self.prefill_steps,
+            "decode_steps": self.decode_steps,
+        }
+
+
+def format_summary(s: dict) -> str:
+    return (
+        f"served {s['completed']} requests ({s['rejected']} rejected): "
+        f"{s['tokens']} tokens / {s['wall_s']:.2f}s = "
+        f"{s['tok_per_s']:.1f} tok/s\n"
+        f"  TTFT p50 {s['ttft_p50_s']*1e3:7.1f} ms   "
+        f"p95 {s['ttft_p95_s']*1e3:7.1f} ms\n"
+        f"  TPOT p50 {s['tpot_p50_s']*1e3:7.1f} ms   "
+        f"p95 {s['tpot_p95_s']*1e3:7.1f} ms\n"
+        f"  steps: {s['prefill_steps']} prefill + {s['decode_steps']} decode"
+        f"   queue depth max {s['queue_depth_max']}")

@@ -1,0 +1,57 @@
+"""On-device token sampling for the serving engine.
+
+``make_sampler`` closes over the (static) sampling configuration and
+returns a pure ``(logits, key) -> tokens`` function that runs inside the
+engine's jitted step — no per-token host round trip and no hidden host RNG:
+the engine owns one seeded PRNG key and threads a fresh split into every
+step, so temperature = 0 (greedy, key unused) is bit-deterministic and
+temperature > 0 is reproducible from the seed.
+
+Filters compose the standard way: logits are divided by the temperature,
+then truncated to the top-k ids, then to the top-p (nucleus) mass, and the
+survivor set is sampled with ``jax.random.categorical``.  Logits may be
+vocab-sharded (the decode head's layout); the reductions/sorts here are
+plain jnp ops, so GSPMD inserts the vocab collectives.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def top_k_mask(logits, k: int):
+    """Keep the k largest logits per row (ties keep extras)."""
+    kth = jnp.sort(logits, axis=-1)[:, -k][:, None]
+    return jnp.where(logits < kth, NEG_INF, logits)
+
+
+def top_p_mask(logits, p: float):
+    """Nucleus filter: keep the smallest prefix of the probability-sorted
+    vocab whose cumulative mass reaches ``p`` (always >= 1 token)."""
+    sl = jnp.sort(logits, axis=-1)[:, ::-1]                   # desc
+    probs = jax.nn.softmax(sl.astype(jnp.float32), axis=-1)
+    csum = jnp.cumsum(probs, axis=-1)
+    cut = jnp.sum(csum < p, axis=-1, keepdims=True)           # prefix size - 1
+    cut = jnp.minimum(cut, logits.shape[-1] - 1)
+    thresh = jnp.take_along_axis(sl, cut, axis=-1)
+    return jnp.where(logits < thresh, NEG_INF, logits)
+
+
+def make_sampler(temperature: float, top_k: int = 0, top_p: float = 0.0):
+    """-> sample(logits (B, V), key) -> (B,) int32 token ids."""
+    if temperature <= 0:
+        def greedy(logits, key):
+            return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        return greedy
+
+    def sample(logits, key):
+        l = logits.astype(jnp.float32) / temperature
+        if top_k and top_k < l.shape[-1]:
+            l = top_k_mask(l, top_k)
+        if 0.0 < top_p < 1.0:
+            l = top_p_mask(l, top_p)
+        return jax.random.categorical(key, l, axis=-1).astype(jnp.int32)
+
+    return sample
