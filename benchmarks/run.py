@@ -152,7 +152,7 @@ def comm_volume():
                 _row("comm_volume|ratio_1d_over_3d", "", f"{b1/b3:.2f}x")
             if b2 and b3:
                 _row("comm_volume|ratio_2d_over_3d", "", f"{b2/b3:.2f}x")
-            return
+            return res
     print(proc.stdout[-2000:], file=sys.stderr)
     print(proc.stderr[-2000:], file=sys.stderr)
     _row("comm_volume", "", "FAILED")
@@ -234,7 +234,7 @@ def minirun():
             res = json.loads(line[len("RESULT "):])
             for strat, t in res.items():
                 _row(f"minirun_fwdbwd|{strat}|8hostdev", f"{t*1e6:.0f}", "")
-            return
+            return res
     print(proc.stderr[-1500:], file=sys.stderr)
     _row("minirun", "", "FAILED")
 
@@ -312,7 +312,7 @@ def ppsweep():
                 _row(f"ppsweep_train_step|{name}|8hostdev",
                      f"{r['t_step']*1e6:.0f}",
                      f"bubble={r['bubble']:.3f} loss={r['loss']:.4f}")
-            return
+            return res
     print(proc.stderr[-2000:], file=sys.stderr)
     _row("ppsweep", "", "FAILED")
 
@@ -389,7 +389,7 @@ def zerosweep():
                      f"{r['t_step']*1e6:.0f}",
                      f"opt_bytes_dev0={r['opt_bytes_dev0']}"
                      f"{saved} loss={r['loss']:.4f}")
-            return
+            return res
     print(proc.stderr[-2000:], file=sys.stderr)
     _row("zerosweep", "", "FAILED")
 
@@ -461,9 +461,179 @@ def servesweep():
             if base and new:
                 _row("servesweep|chunked_vs_seed_speedup", "",
                      f"{new/base:.2f}x (criterion: >= 2x on prompts >= 16)")
-            return
+            return res
     print(proc.stderr[-2000:], file=sys.stderr)
     _row("servesweep", "", "FAILED")
+
+
+# ---------------------------------------------------------------------------
+# Overlap sweep: async-TP chunked 3-D collectives (train step time) + fused
+# paged flash-decode vs gather_view materialization (TPOT), 8 host devices.
+# Both halves carry a <= 1e-4 equivalence check against the unfused path.
+# ---------------------------------------------------------------------------
+OVERLAPSWEEP_SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import sys, time, json, dataclasses
+sys.path.insert(0, %(src)r)
+import jax, numpy as np
+import jax.numpy as jnp
+from repro.config import ShapeConfig, reduced
+from repro.configs.registry import get
+from repro.core.topology import make_layout
+from repro.data.pipeline import TokenStream
+from repro.models import blocks as B
+from repro.models import transformer
+from repro.serve import Engine, Request, kvcache
+
+out = {"train": {}, "decode": {}, "equivalence": {}}
+
+# ---- training: overlapped vs unfused 3-D island collectives --------------
+cfg = dataclasses.replace(reduced(get("paper-transformer"), d_model=512),
+                          n_layers=2, remat=False)
+lay_off = make_layout(cube=(1, 2, 4))
+lay_on = dataclasses.replace(lay_off, overlap=True, overlap_chunks=4)
+
+def grad_fn(lay):
+    def fwd(p, b):
+        loss, _ = transformer.forward(cfg, lay, p, b, mode="train")
+        return loss
+    return jax.jit(jax.value_and_grad(fwd))
+
+shape = ShapeConfig("o", 256, 8, "train")
+for name, lay in (("overlap_off", lay_off), ("overlap_on", lay_on)):
+    params = transformer.init(cfg, lay, jax.random.key(0))
+    batch = next(iter(TokenStream(cfg, lay, shape)))
+    g = grad_fn(lay)
+    jax.block_until_ready(g(params, batch))
+    t0 = time.perf_counter()
+    for _ in range(3):
+        jax.block_until_ready(g(params, batch))
+    out["train"][name] = {"t_step": (time.perf_counter() - t0) / 3}
+
+# equivalence in f32 (bf16 rounding would mask the comparison — params
+# default to bf16 regardless of cfg, so cast the whole tree): loss + the
+# full grad tree must agree <= 1e-4 between overlap on and off
+diffs = []
+res = {}
+for name, lay in (("off", lay_off), ("on", lay_on)):
+    params = transformer.init(cfg, lay, jax.random.key(0))
+    params = jax.tree.map(lambda x: x.astype(jnp.float32), params)
+    batch = next(iter(TokenStream(cfg, lay, shape)))
+    loss, grads = grad_fn(lay)(params, batch)
+    res[name] = (float(loss), jax.device_get(grads))
+dl = abs(res["on"][0] - res["off"][0])
+for a, b in zip(jax.tree.leaves(res["on"][1]), jax.tree.leaves(res["off"][1])):
+    diffs.append(float(jnp.max(jnp.abs(a.astype(jnp.float32)
+                                       - b.astype(jnp.float32)))))
+out["equivalence"]["train_loss_diff"] = dl
+out["equivalence"]["train_grad_maxdiff"] = max(diffs)
+
+# ---- decode: fused paged flash-decode vs gather_view ---------------------
+scfg = reduced(get("qwen3-4b"))
+slay = make_layout(cube=(1, 2, 4))
+PROMPT_LEN, MAX_NEW, N_REQ, BS = 24, 16, 8, 8
+
+def reqs():
+    return [Request(uid=i, prompt=[2 + (i + j) %% 17 for j in range(PROMPT_LEN)],
+                    max_new=MAX_NEW) for i in range(N_REQ)]
+
+sparams = transformer.init(scfg, slay, jax.random.key(0))
+outs = {}
+for name, fused in (("fused_off", False), ("fused_on", True)):
+    eng = Engine(scfg, slay, sparams, batch_size=BS, max_len=64,
+                 fused_decode=fused)
+    eng.run(reqs())                        # warm-up: compile every bucket
+    rs = reqs()
+    stats = eng.run(rs)
+    outs[name] = [tuple(r.out) for r in rs]
+    out["decode"][name] = {"tpot_p50_s": stats["tpot_p50_s"],
+                           "tok_per_s": stats["tok_per_s"],
+                           "steps": stats["steps"]}
+out["equivalence"]["decode_greedy_match"] = outs["fused_off"] == outs["fused_on"]
+
+# decode-logits equivalence in f32: same pool state, one decode step through
+# the fused page path vs the materialized gather_view path (params cast to
+# f32 — cfg.dtype does not reach the Param defaults)
+p32 = jax.tree.map(lambda x: x.astype(jnp.float32), sparams)
+eng = Engine(scfg, slay, p32, batch_size=BS, max_len=64, fused_decode=True)
+for r in reqs():
+    eng.submit(r)
+for _ in range(3):                         # prefill + a couple decode ticks
+    eng.step()
+tok = np.zeros((BS, 1), np.int32)
+active = np.zeros((BS,), bool)
+for i, r in enumerate(eng.slots):
+    if r is not None and r.out:
+        tok[i, 0] = r.out[-1]
+        active[i] = True
+tables = eng.kv.tables_device()
+blk = eng.kv.block
+batch_d = {"token": jnp.asarray(tok), "pos": jnp.asarray(eng.pos)}
+page = B.PageInfo(tables=tables, active=jnp.asarray(active), block=blk)
+lf, _ = transformer.forward(scfg, slay, p32, batch_d, mode="decode",
+                            cache=eng.pool, page=page)
+view = kvcache.gather_view(eng.pool, tables, blk)
+lu, _ = transformer.forward(scfg, slay, p32, batch_d, mode="decode",
+                            cache=view)
+d = jnp.max(jnp.abs(lf.astype(jnp.float32) - lu.astype(jnp.float32)),
+            axis=tuple(range(1, lf.ndim)))
+out["equivalence"]["decode_logits_maxdiff"] = float(
+    jnp.max(jnp.where(jnp.asarray(active), d, 0.0)))
+print("RESULT " + json.dumps(out))
+"""
+
+
+def overlapsweep():
+    env = dict(os.environ, PYTHONPATH=os.path.join(ROOT, "src"))
+    proc = subprocess.run(
+        [sys.executable, "-c",
+         OVERLAPSWEEP_SCRIPT % {"src": os.path.join(ROOT, "src")}],
+        env=env, capture_output=True, text=True, timeout=3000)
+    for line in proc.stdout.splitlines():
+        if not line.startswith("RESULT "):
+            continue
+        res = json.loads(line[len("RESULT "):])
+        for name, r in res["train"].items():
+            _row(f"overlapsweep_train_step|{name}|3d8|8hostdev",
+                 f"{r['t_step']*1e6:.0f}", "")
+        for name, r in res["decode"].items():
+            _row(f"overlapsweep_decode|{name}|3d8|8hostdev", "",
+                 f"tpot_p50_s={r['tpot_p50_s']:.4f} "
+                 f"tok_per_s={r['tok_per_s']:.1f} steps={r['steps']}")
+        eq = res["equivalence"]
+        t_off = res["train"]["overlap_off"]["t_step"]
+        t_on = res["train"]["overlap_on"]["t_step"]
+        tp_off = res["decode"]["fused_off"]["tpot_p50_s"]
+        tp_on = res["decode"]["fused_on"]["tpot_p50_s"]
+        crit = {
+            "train_step_speedup": t_off / t_on,
+            "decode_tpot_speedup": tp_off / max(tp_on, 1e-12),
+            "any_measured_win": t_on < t_off or tp_on < tp_off,
+            "train_grad_maxdiff": eq["train_grad_maxdiff"],
+            "decode_logits_maxdiff": eq["decode_logits_maxdiff"],
+            "decode_greedy_match": eq["decode_greedy_match"],
+            "equivalence_1e-4": (eq["train_loss_diff"] <= 1e-4
+                                 and eq["train_grad_maxdiff"] <= 1e-4
+                                 and eq["decode_logits_maxdiff"] <= 1e-4),
+        }
+        _row("overlapsweep|train_speedup", "",
+             f"{crit['train_step_speedup']:.2f}x (overlap on vs off)")
+        _row("overlapsweep|decode_tpot_speedup", "",
+             f"{crit['decode_tpot_speedup']:.2f}x (fused vs gather_view)")
+        _row("overlapsweep|criteria", "",
+             f"any_measured_win={crit['any_measured_win']} "
+             f"equivalence_1e-4={crit['equivalence_1e-4']} "
+             f"(grad={eq['train_grad_maxdiff']:.2e} "
+             f"logits={eq['decode_logits_maxdiff']:.2e} "
+             f"greedy_match={eq['decode_greedy_match']})")
+        res["criteria"] = crit
+        res["plan"] = {"strategy": "3d", "n_model": 8, "cube": [1, 2, 4],
+                       "overlap_chunks": 4, "host_devices": 8}
+        return res
+    print(proc.stderr[-2000:], file=sys.stderr)
+    _row("overlapsweep", "", "FAILED")
+    return None
 
 
 # ---------------------------------------------------------------------------
@@ -480,27 +650,37 @@ def roofline(path=None):
              fmt_row(r))
 
 
+def _emit(scenario, res, out_dir):
+    """``--out`` contract: BENCH_<scenario>.json with the scenario name, the
+    plan it ran under (when the scenario reports one), its metrics and the
+    criteria pass/fail map."""
+    if res is None:
+        return
+    doc = {"scenario": scenario,
+           "plan": res.pop("plan", None),
+           "criteria": res.pop("criteria", None),
+           "metrics": res}
+    path = os.path.join(out_dir, f"BENCH_{scenario}.json")
+    with open(path, "w") as f:
+        json.dump(doc, f, indent=2, sort_keys=True)
+    print(f"# wrote {path}", file=sys.stderr)
+
+
 def main() -> None:
-    which = sys.argv[1] if len(sys.argv) > 1 else "all"
+    argv = [a for a in sys.argv[1:] if a != "--out"]
+    out_dir = ROOT if "--out" in sys.argv[1:] else None
+    which = argv[0] if argv else "all"
+    scenarios = {"table1": table1, "table2": table2, "comm": comm_volume,
+                 "kernels": kernels, "minirun": minirun, "ppsweep": ppsweep,
+                 "zerosweep": zerosweep, "servesweep": servesweep,
+                 "overlapsweep": overlapsweep, "roofline": roofline}
     print("name,us_per_call,derived")
-    if which in ("table1", "all"):
-        table1()
-    if which in ("table2", "all"):
-        table2()
-    if which in ("comm", "all"):
-        comm_volume()
-    if which in ("kernels", "all"):
-        kernels()
-    if which in ("minirun", "all"):
-        minirun()
-    if which in ("ppsweep", "all"):
-        ppsweep()
-    if which in ("zerosweep", "all"):
-        zerosweep()
-    if which in ("servesweep", "all"):
-        servesweep()
-    if which in ("roofline", "all"):
-        roofline()
+    for name, fn in scenarios.items():
+        if which not in (name, "all"):
+            continue
+        res = fn()
+        if out_dir is not None and isinstance(res, dict):
+            _emit(name, res, out_dir)
 
 
 if __name__ == "__main__":

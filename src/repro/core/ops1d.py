@@ -18,7 +18,24 @@ from jax import lax
 from jax.sharding import PartitionSpec as P
 
 from .topology import Layout
-from .ops3d import _mm, _shmap, _grad_sync_axes
+from .ops3d import _shmap, _grad_sync_axes
+from .ops3d import _mm as _mm_default
+
+# local matmul hook — replaced by the Pallas kernel when enabled
+# (kernels/ops.py); per-module so each strategy can be toggled independently
+_LOCAL_MATMUL = None
+
+
+def set_local_matmul(fn):
+    """Install a custom local matmul (e.g. the Pallas MXU kernel)."""
+    global _LOCAL_MATMUL
+    _LOCAL_MATMUL = fn
+
+
+def _mm(a, b):
+    if _LOCAL_MATMUL is not None:
+        return _LOCAL_MATMUL(a, b)
+    return _mm_default(a, b)
 
 
 def _act_rep_spec(layout: Layout) -> P:

@@ -81,6 +81,88 @@ def _grad_sync_axes(layout: Layout) -> Tuple[str, ...]:
 
 
 # ---------------------------------------------------------------------------
+# Async-TP chunking (Layout.overlap): each island matmul is decomposed into
+# K chunks along the *local contraction* dimension, so chunk t's all_gather /
+# psum_scatter is independent of chunk t-1's partial matmul and the compiler
+# (async collectives on TPU) can run them concurrently.  Chunking the
+# contraction dim — never the gathered sequence dim — keeps the device-major
+# concatenation order of every all_gather identical to the unfused path, so
+# the result matches up to f32 summation reordering (psum_scatter is linear:
+# scattering each chunk and summing scattered partials in f32 equals
+# scattering the full f32 sum).
+# ---------------------------------------------------------------------------
+def _overlap_k(layout: Layout, n: int) -> int:
+    """Effective chunk count: the largest divisor of the local contraction
+    size ``n`` that is <= layout.overlap_chunks; 1 disables chunking."""
+    if not layout.overlap:
+        return 1
+    k = max(1, min(layout.overlap_chunks, n))
+    while n % k:
+        k -= 1
+    return k
+
+
+def _fwd_chunked(layout, in_ax, out_ax, shard_f, x, w, k):
+    """Chunked Algorithm 1 body: per-chunk AG(x-slice)/AG(w-rows) + partial
+    matmul + per-chunk reduce-scatter, accumulated in f32."""
+    ck = x.shape[-1] // k
+    acc = None
+    for t in range(k):
+        xk = lax.slice_in_dim(x, t * ck, (t + 1) * ck, axis=-1)
+        wk = lax.slice_in_dim(w, t * ck, (t + 1) * ck, axis=0)
+        xg = lax.all_gather(xk, in_ax, axis=1, tiled=True)
+        wg = lax.all_gather(wk, "x", axis=1, tiled=True) if shard_f else wk
+        c = _mm(xg, wg).astype(jnp.float32)
+        p = lax.psum_scatter(c, out_ax, scatter_dimension=1, tiled=True)
+        acc = p if acc is None else acc + p
+    return acc.astype(x.dtype)
+
+
+def _dx_chunked(layout, in_ax, out_ax, dcg, w, k):
+    """Chunked dx = dc @ w^T over the contraction dim f.  ``dcg`` is the
+    (shared, unchunked) gather of dc along out_ax; w's column chunks are
+    gathered along 'x' per chunk.  The gathered w columns are x-device-major
+    blocks of the local width, so dcg's matching features are selected by a
+    (sx, f_loc) reshape before slicing.  Requires shard_f."""
+    f_loc = w.shape[1]
+    ck = f_loc // k
+    sx = layout.size("x")
+    b, s, _ = dcg.shape
+    dcr = dcg.reshape(b, s, sx, f_loc)
+    acc = None
+    for t in range(k):
+        wk = lax.slice_in_dim(w, t * ck, (t + 1) * ck, axis=1)
+        wg = lax.all_gather(wk, "x", axis=1, tiled=True)       # (h/so, sx*ck)
+        dck = lax.slice_in_dim(dcr, t * ck, (t + 1) * ck, axis=3)
+        dck = dck.reshape(b, s, sx * ck)
+        dxp = jnp.einsum("bsf,hf->bsh", dck, wg,
+                         preferred_element_type=jnp.float32)
+        p = lax.psum_scatter(dxp, in_ax, scatter_dimension=1, tiled=True)
+        acc = p if acc is None else acc + p
+    return acc
+
+
+def _dw_chunked(layout, in_ax, out_ax, shard_f, x, dcg, k):
+    """Chunked dw = x^T @ dc over the output-row dim h: per-chunk AG of x's
+    feature slice + per-chunk reduce-scatter of the dw row block.  Row
+    chunks are disjoint, so they concatenate (no accumulation) and each
+    matches the unfused value exactly."""
+    ck = x.shape[-1] // k
+    rows = []
+    for t in range(k):
+        xk = lax.slice_in_dim(x, t * ck, (t + 1) * ck, axis=-1)
+        xg = lax.all_gather(xk, in_ax, axis=1, tiled=True)     # (b, S', ck)
+        dwp = jnp.einsum("bsh,bsf->hf", xg, dcg,
+                         preferred_element_type=jnp.float32).astype(x.dtype)
+        if shard_f:
+            rows.append(lax.psum_scatter(dwp, "x", scatter_dimension=1,
+                                         tiled=True))
+        else:
+            rows.append(lax.psum(dwp, "x") if layout.size("x") > 1 else dwp)
+    return jnp.concatenate(rows, axis=0) if k > 1 else rows[0]
+
+
+# ---------------------------------------------------------------------------
 # Algorithm 1 (forward  C = AB) + Algorithm 2 (backward) — training path
 #
 # ``shard_f`` selects whether the weight's output dim uses the full balanced
@@ -112,6 +194,9 @@ def y_spec3d(layout: Layout, in_ax: str, out_ax: str, shard_f: bool = True) -> P
 
 def _matmul3d_fwd_island(layout, in_ax, out_ax, shard_f=True):
     def body(x, w):
+        k = _overlap_k(layout, x.shape[-1])
+        if k > 1:
+            return _fwd_chunked(layout, in_ax, out_ax, shard_f, x, w, k)
         xg = lax.all_gather(x, in_ax, axis=1, tiled=True)      # (b, S', h/so)
         wg = lax.all_gather(w, "x", axis=1, tiled=True) if shard_f else w
         c = _mm(xg, wg)                                        # partial over out_ax
@@ -126,6 +211,11 @@ def _matmul3d_dx_island(layout, in_ax, out_ax, shard_f=True):
     # Algorithm 2, line 1:  dx = dc @ w^T  in directions (out_ax, x, in_ax)
     def body(dc, w):
         dcg = lax.all_gather(dc, out_ax, axis=1, tiled=True)   # (b, S', f/si)
+        if shard_f:
+            k = _overlap_k(layout, w.shape[1])
+            if k > 1:
+                return _dx_chunked(layout, in_ax, out_ax, dcg, w,
+                                   k).astype(dc.dtype)
         wg = lax.all_gather(w, "x", axis=1, tiled=True) if shard_f else w
         dxp = jnp.einsum("bsf,hf->bsh", dcg, wg,
                          preferred_element_type=jnp.float32).astype(dc.dtype)
@@ -150,8 +240,14 @@ def _matmul3d_dw_island(layout, in_ax, out_ax, shard_f=True):
     sync = _grad_sync_axes(layout)
 
     def body(x, dc):
-        xg = lax.all_gather(x, in_ax, axis=1, tiled=True)      # (b, S', h/so)
         dcg = lax.all_gather(dc, out_ax, axis=1, tiled=True)   # (b, S', f/si)
+        k = _overlap_k(layout, x.shape[-1])
+        if k > 1:
+            dw = _dw_chunked(layout, in_ax, out_ax, shard_f, x, dcg, k)
+            if sync:
+                dw = lax.psum(dw, sync)
+            return dw.astype(x.dtype)
+        xg = lax.all_gather(x, in_ax, axis=1, tiled=True)      # (b, S', h/so)
         dwp = jnp.einsum("bsh,bsf->hf", xg, dcg,
                          preferred_element_type=jnp.float32)   # partial over batch+x
         # bf16 gradient reduction (standard practice): halves the dw
@@ -184,6 +280,33 @@ def _matmul3d_bwd_island(layout, in_ax, out_ax, shard_f=True):
 
     def body(x, dc, w):
         dcg = lax.all_gather(dc, out_ax, axis=1, tiled=True)   # shared gather
+        k = _overlap_k(layout, x.shape[-1])
+        if k > 1:
+            if shard_f:
+                kf = _overlap_k(layout, w.shape[1])
+                dx = (_dx_chunked(layout, in_ax, out_ax, dcg, w, kf)
+                      .astype(dc.dtype) if kf > 1 else None)
+            else:
+                dx = None
+            if dx is None:
+                wg = (lax.all_gather(w, "x", axis=1, tiled=True)
+                      if shard_f else w)
+                dxp = jnp.einsum("bsf,hf->bsh", dcg, wg,
+                                 preferred_element_type=jnp.float32
+                                 ).astype(dc.dtype)
+                if shard_f:
+                    dx = lax.psum_scatter(dxp, in_ax, scatter_dimension=1,
+                                          tiled=True)
+                else:
+                    si = layout.size(in_ax)
+                    s_loc = dxp.shape[1] // si
+                    idx = lax.axis_index(in_ax)
+                    dx = lax.dynamic_slice_in_dim(dxp, idx * s_loc, s_loc,
+                                                  axis=1)
+            dw = _dw_chunked(layout, in_ax, out_ax, shard_f, x, dcg, k)
+            if sync:
+                dw = lax.psum(dw, sync)
+            return dx, dw.astype(x.dtype)
         wg = lax.all_gather(w, "x", axis=1, tiled=True) if shard_f else w
         dxp = jnp.einsum("bsf,hf->bsh", dcg, wg,
                          preferred_element_type=jnp.float32).astype(dc.dtype)

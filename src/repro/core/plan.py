@@ -74,6 +74,10 @@ class ParallelPlan:
     # stage 1 when the data degree > 1, else 0.  Explicit values are
     # validated (0..2; >0 requires a data degree to shard over).
     zero_stage: Optional[int] = None
+    # async-TP: chunk the 3-D island collectives so communication overlaps
+    # the partial matmuls (3d strategy only; see core/ops3d.py).
+    overlap: bool = False
+    overlap_chunks: int = 4
 
     # ---- derived ----
     @property
@@ -164,6 +168,19 @@ class ParallelPlan:
                     f"zero_stage={self.zero_stage} requires a data-parallel "
                     f"degree > 1 to shard over, got pod*dp={self.n_data}; "
                     "grow --dp or drop --zero")
+        if self.overlap_chunks < 1:
+            raise ValueError(
+                f"overlap_chunks={self.overlap_chunks} must be >= 1")
+        if self.overlap and self.strategy != "3d":
+            raise ValueError(
+                f"overlap=True is only wired into the 3-D islands, got "
+                f"strategy={self.strategy!r}; drop --overlap or use "
+                "strategy='3d'")
+        if self.overlap and self.gspmd_linears:
+            raise ValueError(
+                "overlap=True conflicts with gspmd_linears=True: the GSPMD "
+                "ablation delegates the collective schedule to XLA, so the "
+                "explicit chunked overlap never runs; pick one")
         return self
 
     # ---- materialization ----
@@ -174,7 +191,8 @@ class ParallelPlan:
             batch_axes=self.batch_axes, seq_axes=self.seq_axes,
             devices=devices, gspmd_linears=self.gspmd_linears,
             n_pp=self.n_stages, microbatches=self.microbatches,
-            zero_stage=self.resolved_zero_stage)
+            zero_stage=self.resolved_zero_stage,
+            overlap=self.overlap, overlap_chunks=self.overlap_chunks)
 
     def describe(self) -> dict:
         px, py, pz = self.cube_dims
@@ -188,4 +206,6 @@ class ParallelPlan:
             "pipeline_efficiency": round(self.pipeline_efficiency(), 4),
             "strategy": self.strategy,
             "zero_stage": self.resolved_zero_stage,
+            "overlap": self.overlap,
+            "overlap_chunks": self.overlap_chunks if self.overlap else 0,
         }

@@ -112,6 +112,14 @@ class Layout:
     # data degree is 1 (see effective_zero_stage).  Default 1 preserves the
     # historical behaviour of sharding moments whenever dp > 1.
     zero_stage: int = 1
+    # async-TP: decompose each 3-D island matmul into ``overlap_chunks``
+    # contraction-dim chunks so every chunk's all_gather / psum_scatter can
+    # run concurrently with the neighbouring chunk's partial matmul
+    # (nanotron's tp_linear_async_communication; Narayanan et al. 2021
+    # scatter-gather).  Numerics match the unfused path up to f32 summation
+    # reordering.  Only the 3-D islands read these fields.
+    overlap: bool = False
+    overlap_chunks: int = 4
 
     # ---- sizes ----
     @property
@@ -255,11 +263,12 @@ def make_mesh(n_pod: int = 1, n_dp: int = 1, n_model: int = 1,
 def make_layout(n_pod=1, n_dp=1, n_model=1, strategy="3d", cube=None,
                 batch_axes=("pod", "dp", "x"), seq_axes=(), devices=None,
                 gspmd_linears=False, n_pp=1, microbatches=1,
-                zero_stage=1) -> Layout:
+                zero_stage=1, overlap=False, overlap_chunks=4) -> Layout:
     mesh = make_mesh(n_pod, n_dp, n_model, strategy, cube, devices, n_pp)
     return Layout(mesh=mesh, strategy=strategy, gspmd_linears=gspmd_linears,
                   batch_axes=tuple(batch_axes), seq_axes=tuple(seq_axes),
-                  microbatches=microbatches, zero_stage=zero_stage)
+                  microbatches=microbatches, zero_stage=zero_stage,
+                  overlap=overlap, overlap_chunks=overlap_chunks)
 
 
 def single_device_layout(strategy: str = "3d") -> Layout:

@@ -13,8 +13,10 @@ import jax
 import jax.numpy as jnp
 
 from . import ref
+from . import paged_decode as paged_decode_mod
 from .flash_attention import flash_attention
 from .matmul import matmul
+from .paged_decode import paged_flash_decode
 from .rmsnorm import rmsnorm
 from .ssd_scan import ssd_scan
 
@@ -56,17 +58,34 @@ def pallas_rmsnorm(x, gamma, *, eps=1e-6, zero_centered=False, interpret=None):
                    interpret=interpret)
 
 
+def pallas_paged_decode(q, k_pool, v_pool, pos_pool, tables, cur, *,
+                        block, window=0, scale=None, interpret=None):
+    """Fused paged flash-decode through the block table (serving hot path)."""
+    interpret = (not ON_TPU) if interpret is None else interpret
+    return paged_flash_decode(q, k_pool, v_pool, pos_pool, tables, cur,
+                              block=block, window=window, scale=scale,
+                              impl="pallas", interpret=interpret)
+
+
 def enable_kernels(interpret=None):
-    """Install the Pallas matmul as the local GEMM of every 3-D island."""
-    from ..core import ops3d
+    """Install the Pallas matmul as the local GEMM of every tensor-parallel
+    island (3-D, 2-D SUMMA, 1-D Megatron) and route the serving engine's
+    paged decode through the Pallas kernel."""
+    from ..core import ops1d, ops2d, ops3d
     interp = (not ON_TPU) if interpret is None else interpret
 
     def local_mm(a, b):
         return pallas_matmul(a, b, interpret=interp)
 
     ops3d.set_local_matmul(local_mm)
+    ops1d.set_local_matmul(local_mm)
+    ops2d.set_local_matmul(local_mm)
+    paged_decode_mod.set_default_impl("pallas", interpret=interp)
 
 
 def disable_kernels():
-    from ..core import ops3d
+    from ..core import ops1d, ops2d, ops3d
     ops3d.set_local_matmul(None)
+    ops1d.set_local_matmul(None)
+    ops2d.set_local_matmul(None)
+    paged_decode_mod.set_default_impl(None)

@@ -1,0 +1,243 @@
+"""Fused paged flash-decode: attention for one new token per slot, read
+directly out of the paged KV pool through the block table.
+
+The baseline decode path materializes a contiguous per-slot cache view
+(``serve/kvcache.py:gather_view``) — a full copy of every layer's pool —
+before the attention islands ever run.  This kernel removes that copy: the
+grid walks each slot's block table (scalar-prefetched so the index maps can
+dereference it), streams the table's physical KV blocks straight from the
+pool, and accumulates an online softmax over blocks.  Null-block lanes
+(table entry 0, positions forever -1) and recycled blocks are masked by the
+pool's position leaf, exactly like the gathered path.
+
+Shapes (one layer, per device):
+
+    q        (B, nq, dk)        new-token queries, nq = nkv * group
+    k_pool   (phys, nkv, dk)    phys = n_blocks * block
+    v_pool   (phys, nkv, dv)    dv may differ from dk (MLA latents)
+    pos_pool (phys,) int32      logical position per entry, -1 = invalid
+    tables   (B, nb) int32      physical block id per view block
+    cur      (B,) int32         current decode position per slot
+    -> out   (B, nq, dv)
+
+Masking contract: entry ``e`` of slot ``b`` attends iff
+``0 <= pos_pool[e] <= cur[b]`` (and ``cur[b] - pos_pool[e] < window`` when
+sliding-window).  The fused decode paths keep the current token OUT of the
+pool during the step (the pool is read-only in the forward) and fold its
+(k, v) into the online softmax afterwards via ``return_residuals``; the
+engine then writes all layers' new entries in one batched scatter.
+
+MLA fits the same kernel with nkv=1: K = concat(c_kv, k_rope) features,
+V = c_kv, q = concat(absorbed q_latent, q_rope) — see ``models/mla.py``.
+
+``impl`` selects the backend: "pallas" (the fused kernel; interpret mode on
+CPU) or "jnp" (a pool-indexing jnp fallback that still skips gather_view's
+all-layer copy).  ``None`` resolves to pallas on TPU and jnp on CPU
+(interpret-mode Pallas is python-slow; the jnp path is the CPU serving
+default, the kernel is covered by interpret-mode tests).
+"""
+from __future__ import annotations
+
+import functools
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from ..core.compat import tpu_compiler_params
+
+NEG_INF = -1e30
+
+# (impl, interpret) forced by kernels/ops.py:enable_kernels; None = auto
+_FORCED: Optional[tuple] = None
+
+
+def set_default_impl(impl: Optional[str], interpret: Optional[bool] = None):
+    """Force the backend picked when callers pass impl=None (enable_kernels
+    routes serving through the Pallas kernel even on CPU); None resets."""
+    global _FORCED
+    _FORCED = None if impl is None else (impl, interpret)
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+# ---------------------------------------------------------------------------
+# Pallas kernel
+# ---------------------------------------------------------------------------
+def _decode_kernel(tbl_ref, cur_ref, q_ref, k_ref, v_ref, kp_ref, o_ref,
+                   mo_ref, lo_ref, m_ref, l_ref, acc_ref, *, window: int,
+                   scale: float, residuals: bool):
+    j = pl.program_id(2)
+
+    @pl.when(j == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    b = pl.program_id(0)
+    cur = cur_ref[b]
+    q = q_ref[...].astype(jnp.float32) * scale          # (g, dk)
+    k = k_ref[...].astype(jnp.float32)                  # (block, dk)
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())))  # (g, block)
+    kp = kp_ref[0, :]                                   # (block,)
+    valid = (kp >= 0) & (kp <= cur)
+    if window:
+        valid &= (cur - kp) < window
+    s = jnp.where(valid[None, :], s, NEG_INF)
+    m_prev = m_ref[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
+    alpha = jnp.exp(m_prev - m_new)
+    # explicit re-mask: a fully-invalid block (the null block) would give
+    # exp(NEG_INF - NEG_INF) = 1 on the first grid step otherwise
+    p = jnp.where(valid[None, :], jnp.exp(s - m_new), 0.0)
+    v = v_ref[...].astype(jnp.float32)                  # (block, dv)
+    l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=1, keepdims=True)
+    acc_ref[...] = acc_ref[...] * alpha + p @ v
+    m_ref[...] = m_new
+
+    @pl.when(j == pl.num_programs(2) - 1)
+    def _finish():
+        mo_ref[...] = m_ref[...]
+        lo_ref[...] = l_ref[...]
+        if residuals:
+            # unnormalized accumulator: the caller combines table shards
+            # via softmax residuals (m, l) and divides once at the end
+            o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+        else:
+            o_ref[...] = (acc_ref[...]
+                          / jnp.maximum(l_ref[...], 1e-30)).astype(o_ref.dtype)
+
+
+def _pallas_impl(q, k_pool, v_pool, pos_pool, tables, cur, *, block, window,
+                 scale, interpret, residuals=False):
+    B, nq, dk = q.shape
+    phys, nkv, _ = k_pool.shape
+    dv = v_pool.shape[-1]
+    g = nq // nkv
+    nb = tables.shape[1]
+    n_blocks = phys // block
+    qr = q.reshape(B, nkv, g, dk)
+    kr = k_pool.reshape(n_blocks, block, nkv, dk)
+    vr = v_pool.reshape(n_blocks, block, nkv, dv)
+    pr = pos_pool.reshape(n_blocks, 1, block)
+
+    kernel = functools.partial(_decode_kernel, window=window, scale=scale,
+                               residuals=residuals)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(B, nkv, nb),
+        in_specs=[
+            pl.BlockSpec((None, None, g, dk),
+                         lambda b, h, j, tbl, cp: (b, h, 0, 0)),
+            # block-table indirection happens in the index map: grid step
+            # (b, h, j) pulls physical block tbl[b, j] out of the pool
+            pl.BlockSpec((None, block, None, dk),
+                         lambda b, h, j, tbl, cp: (tbl[b, j], 0, h, 0)),
+            pl.BlockSpec((None, block, None, dv),
+                         lambda b, h, j, tbl, cp: (tbl[b, j], 0, h, 0)),
+            pl.BlockSpec((None, 1, block),
+                         lambda b, h, j, tbl, cp: (tbl[b, j], 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((None, None, g, dv),
+                         lambda b, h, j, tbl, cp: (b, h, 0, 0)),
+            pl.BlockSpec((None, None, g, 1),
+                         lambda b, h, j, tbl, cp: (b, h, 0, 0)),
+            pl.BlockSpec((None, None, g, 1),
+                         lambda b, h, j, tbl, cp: (b, h, 0, 0)),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((g, 1), jnp.float32),
+            pltpu.VMEM((g, 1), jnp.float32),
+            pltpu.VMEM((g, dv), jnp.float32),
+        ],
+    )
+    out, m, l = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((B, nkv, g, dv),
+                                 jnp.float32 if residuals else q.dtype),
+            jax.ShapeDtypeStruct((B, nkv, g, 1), jnp.float32),
+            jax.ShapeDtypeStruct((B, nkv, g, 1), jnp.float32),
+        ],
+        compiler_params=tpu_compiler_params(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(tables.astype(jnp.int32), cur.astype(jnp.int32), qr, kr, vr, pr)
+    if residuals:
+        return (out.reshape(B, nq, dv), m.reshape(B, nq), l.reshape(B, nq))
+    return out.reshape(B, nq, dv)
+
+
+# ---------------------------------------------------------------------------
+# jnp fallback (CPU serving default): indexes the pool through the tables
+# per layer — no Pallas, but still no all-layer gather_view copy.
+# ---------------------------------------------------------------------------
+def _jnp_impl(q, k_pool, v_pool, pos_pool, tables, cur, *, block, window,
+              scale, residuals=False):
+    B, nq, dk = q.shape
+    nkv = k_pool.shape[1]
+    g = nq // nkv
+    dv = v_pool.shape[-1]
+    flat = (tables[:, :, None] * block
+            + jnp.arange(block, dtype=tables.dtype)).reshape(B, -1)
+    k = k_pool[flat]                                    # (B, L, nkv, dk)
+    v = v_pool[flat]                                    # (B, L, nkv, dv)
+    kp = pos_pool[flat]                                 # (B, L)
+    valid = (kp >= 0) & (kp <= cur[:, None])
+    if window:
+        valid &= (cur[:, None] - kp) < window
+    qf = q.reshape(B, nkv, g, dk).astype(jnp.float32) * scale
+    s = jnp.einsum("bhgd,blhd->bhgl", qf, k.astype(jnp.float32))
+    s = jnp.where(valid[:, None, None, :], s, NEG_INF)
+    m = jnp.max(s, axis=-1, keepdims=True)
+    p = jnp.where(valid[:, None, None, :], jnp.exp(s - m), 0.0)
+    l = jnp.sum(p, axis=-1, keepdims=True)
+    if residuals:
+        acc = jnp.einsum("bhgl,blhd->bhgd", p, v.astype(jnp.float32))
+        return (acc.reshape(B, nq, dv), m.reshape(B, nq), l.reshape(B, nq))
+    out = jnp.einsum("bhgl,blhd->bhgd", p / jnp.maximum(l, 1e-30),
+                     v.astype(jnp.float32))
+    return out.reshape(B, nq, -1).astype(q.dtype)
+
+
+def paged_flash_decode(q, k_pool, v_pool, pos_pool, tables, cur, *,
+                       block: int, window: int = 0,
+                       scale: Optional[float] = None,
+                       impl: Optional[str] = None,
+                       interpret: Optional[bool] = None,
+                       return_residuals: bool = False):
+    """One decode step of paged attention; see the module docstring.
+
+    ``return_residuals=True`` returns ``(acc, m, l)`` — the unnormalized
+    f32 accumulator plus the online-softmax max and sum — so a caller that
+    shards the block table across devices can psum-combine the partials
+    (``o = psum(acc * exp(m - pmax(m))) / psum(l * exp(m - pmax(m)))``).
+    """
+    if scale is None:
+        scale = 1.0 / math.sqrt(q.shape[-1])
+    if impl is None:
+        if _FORCED is not None:
+            impl, forced_interp = _FORCED
+            if interpret is None:
+                interpret = forced_interp
+        else:
+            impl = "pallas" if _on_tpu() else "jnp"
+    if impl == "jnp":
+        return _jnp_impl(q, k_pool, v_pool, pos_pool, tables, cur,
+                         block=block, window=window, scale=scale,
+                         residuals=return_residuals)
+    if impl != "pallas":
+        raise ValueError(f"unknown paged decode impl {impl!r}")
+    if interpret is None:
+        interpret = not _on_tpu()
+    return _pallas_impl(q, k_pool, v_pool, pos_pool, tables, cur,
+                        block=block, window=window, scale=scale,
+                        interpret=interpret, residuals=return_residuals)

@@ -175,7 +175,8 @@ def memory_model(cfg, layout, shape, opt_cfg):
 def lower_one(arch: str, shape_name: str, *, multi_pod: bool,
               strategy: str = "3d", compile_: bool = True,
               force_window: int = 0, n_pp: int = 1, microbatches: int = 1,
-              zero_stage: int = 1):
+              zero_stage: int = 1, overlap: bool = False,
+              overlap_chunks: int = 4):
     cfg = get(arch)
     if force_window and not cfg.window:
         # sliding-window VARIANT of a full-attention arch: makes long_500k
@@ -206,6 +207,10 @@ def lower_one(arch: str, shape_name: str, *, multi_pod: bool,
                     "status": "SKIP", "reason": reason}
     layout = build_layout(arch, shape_name, multi_pod, strategy, n_pp,
                           microbatches, zero_stage)
+    if overlap:
+        import dataclasses as _dc
+        layout = _dc.replace(layout, overlap=True,
+                             overlap_chunks=overlap_chunks)
     specs = transformer.input_specs(cfg, layout, shape)
     params = abstract_arrays(transformer.abstract_params(cfg, layout), layout)
 
@@ -284,6 +289,11 @@ def main():
                     help="ZeRO stage for the optimizer-state memory model "
                          "and lowering (0 replicated, 1 sharded m/v, 2 + "
                          "sharded grad accumulation); default: auto (1)")
+    ap.add_argument("--overlap", action="store_true",
+                    help="async-TP: chunked 3-D island collectives overlapping"
+                         " the partial matmuls (strategy=3d only)")
+    ap.add_argument("--overlap-chunks", type=int, default=4,
+                    help="chunks per overlapped island matmul")
     ap.add_argument("--lower-only", action="store_true")
     ap.add_argument("--force-window", type=int, default=0,
                     help="run a sliding-window VARIANT of full-attention archs")
@@ -322,7 +332,9 @@ def main():
                                     n_pp=args.pp,
                                     microbatches=args.microbatch,
                                     zero_stage=1 if args.zero < 0
-                                    else args.zero)
+                                    else args.zero,
+                                    overlap=args.overlap,
+                                    overlap_chunks=args.overlap_chunks)
                 except Exception as e:
                     traceback.print_exc()
                     res = {"arch": arch, "shape": shape, "multi_pod": mp,

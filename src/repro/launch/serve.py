@@ -45,6 +45,9 @@ def main(argv=None):
     ap.add_argument("--ckpt-dir", default="")
     ap.add_argument("--inference-opt", action="store_true",
                     help="x-replicated decode weights (zero per-token gathers)")
+    ap.add_argument("--no-fused-decode", action="store_true",
+                    help="paged decode via gather_view materialization "
+                         "instead of the fused block-table kernel path")
     ap.add_argument("--host-devices", type=int, default=0)
     args = ap.parse_args(argv)
 
@@ -89,7 +92,8 @@ def main(argv=None):
                  top_k=args.top_k, top_p=args.top_p, seed=args.seed,
                  block_size=args.block_size,
                  prefill_chunk=args.prefill_chunk,
-                 chunked_prefill=not args.no_chunked_prefill)
+                 chunked_prefill=not args.no_chunked_prefill,
+                 fused_decode=not args.no_fused_decode)
     reqs = [Request(uid=i, prompt=[2 + (i + j) % 17 for j in range(3 + i % 5)],
                     max_new=args.max_new,
                     priority=(1 if args.priority and i % args.priority == 0

@@ -33,6 +33,12 @@ def main(argv=None):
                          "0 = replicated, 1 = shard Adam m/v 1/dp, 2 = also "
                          "keep the grad-accumulation buffer dp-sharded; "
                          "default: auto (1 when --dp > 1, else 0)")
+    ap.add_argument("--overlap", action="store_true",
+                    help="async-TP: chunk the 3-D island collectives so "
+                         "all_gather/psum_scatter overlap the partial matmuls")
+    ap.add_argument("--overlap-chunks", type=int, default=4,
+                    help="chunks per overlapped island matmul (divisor-"
+                         "clamped to the local contraction size)")
     ap.add_argument("--reduced", action="store_true",
                     help="use the smoke-test reduced variant")
     ap.add_argument("--layers", type=int, default=0)
@@ -79,7 +85,9 @@ def main(argv=None):
     plan = ParallelPlan(n_dp=args.dp, n_model=args.model,
                         strategy=args.strategy, n_stages=args.pp,
                         microbatches=args.microbatch,
-                        zero_stage=None if args.zero < 0 else args.zero)
+                        zero_stage=None if args.zero < 0 else args.zero,
+                        overlap=args.overlap,
+                        overlap_chunks=args.overlap_chunks)
     # family-aware plan-time validation: unsupported compositions (mtp+pp,
     # serve-mode pp, too-shallow stacks) fail here with a precise message
     plan.validate(n_layers=cfg.n_layers, global_batch=args.batch, model=cfg)

@@ -223,6 +223,128 @@ def kv_cache_init(layout: Layout, cfg: ModelConfig, dirs: Dirs, batch: int,
     }
 
 
+class PageInfo(NamedTuple):
+    """Decode-time paged-cache routing, threaded from the serving engine
+    through ``transformer.forward(page=...)`` into the attention blocks via
+    the frontend ctx (a constant closure input of the layer scan, never
+    tree-mapped, so the static ``block`` int is safe here)."""
+    tables: jax.Array          # (B, nb) int32 physical block id per view block
+    active: jax.Array          # (B,) bool — inactive lanes write to trash
+    block: int                 # static block size
+
+
+def attention_decode_paged(layout: Layout, cfg: ModelConfig, dirs: Dirs,
+                           q, k_new, v_new, cache, pos, page: PageInfo,
+                           *, window=0):
+    """One-token decode straight against the paged KV pool — the fused
+    replacement for gather_view + attention_decode + scatter_decode.
+
+    The pool is READ-ONLY here.  The paged flash-decode kernel streams the
+    already-written past through the block table inside an attention
+    island; the current token's (k, v) — not yet in the pool — is folded
+    into the same online softmax afterwards via the kernel's residuals.
+    The layer returns only its new entries; the engine writes every
+    layer's entries back in ONE batched scatter (kvcache.scatter_step), so
+    the heavyweight pool never flows through the layer scan as an output.
+
+    The pool's physical dim is replicated across the mesh, so the kv
+    *work* is distributed by sharding the block-table columns over the
+    cache-shard axes (padding with the null block, which is masked anyway)
+    and psum-combining the kernel's online-softmax residuals — the same
+    combine the contiguous decode path uses for its sequence-sharded
+    cache.  Head sharding is handled exactly like the contiguous path.
+
+    Stale-entry safety without write-before-attend: a recycled entry of
+    this slot's own table at the current ring position has age >= the ring
+    length L, so it is masked — dense rings never wrap (cur < L) and
+    windowed rings have L >= window.
+
+    q: (B, 1, nq, d); k_new/v_new: (B, 1, nkv, d); cache: this layer's pool
+    slice {"k": (phys, nkv, d), "v": ..., "pos": (phys,)}; pos: (B,) int32.
+    Returns (out, {"k": (B, nkv, d), "v": (B, nkv, d), "pos": (B,)}).
+    """
+    from ..kernels.paged_decode import paged_flash_decode
+
+    # the stacked pool leaves carry ONE sharding (built from the canonical
+    # entry orientation), so the island pins itself to that orientation
+    # instead of the per-layer alternating dirs: resharding q/out (a few KB)
+    # is free, resharding the pool every other layer is not
+    seq_ax, head_ax = _head_axes(layout, Dirs("y", "z"))
+    hx = layout.size(head_ax)
+    kv_sharded = cfg.n_kv % hx == 0 and cfg.n_kv >= hx
+    gax = _gather_axes(layout, seq_ax)
+    nshards = math.prod(layout.size(a) for a in gax) if gax else 1
+    group = cfg.n_heads // cfg.n_kv
+    nloc = cfg.n_heads // hx
+    blk = page.block
+    scale = 1.0 / math.sqrt(q.shape[-1])
+
+    kspec = P(None, head_ax if kv_sharded else None, None)
+    pspec = P(None)
+    nspec = P(layout.batch_spec(), None, head_ax if kv_sharded else None,
+              None)
+    qspec = P(layout.batch_spec(), None, head_ax, None)
+
+    # each cache shard attends its own slice of table columns; pad with the
+    # null block so the column count divides evenly
+    tbl = page.tables
+    if nshards > 1 and tbl.shape[1] % nshards:
+        tbl = jnp.pad(tbl, ((0, 0),
+                            (0, nshards - tbl.shape[1] % nshards)))
+    nb_loc = tbl.shape[1] // nshards
+
+    def body(q, kn, vn, ck, cv, cpos, tables, pos):
+        if not kv_sharded and hx > 1:
+            hidx = lax.axis_index(head_ax) if head_ax else 0
+            kv0 = (hidx * nloc) // group
+            nkv_loc = max(1, nloc // group)
+            ck = lax.dynamic_slice_in_dim(ck, kv0, nkv_loc, axis=1)
+            cv = lax.dynamic_slice_in_dim(cv, kv0, nkv_loc, axis=1)
+            kn = lax.dynamic_slice_in_dim(kn, kv0, nkv_loc, axis=2)
+            vn = lax.dynamic_slice_in_dim(vn, kv0, nkv_loc, axis=2)
+        if nshards == 1:
+            tloc = tables
+        else:
+            shard = 0
+            for a in gax:
+                shard = shard * layout.size(a) + lax.axis_index(a)
+            tloc = lax.dynamic_slice_in_dim(tables, shard * nb_loc, nb_loc,
+                                            axis=1)
+        acc, m, l = paged_flash_decode(q[:, 0], ck, cv, cpos, tloc, pos,
+                                       block=blk, window=window,
+                                       return_residuals=True)
+        if nshards > 1:
+            mg = lax.pmax(m, gax)
+            w = jnp.exp(m - mg)
+            acc = lax.psum(acc * w[..., None], gax)
+            l = lax.psum(l * w, gax)
+            m = mg
+        # fold the current token (always valid: age 0) into the softmax
+        B, hloc = kn.shape[0], ck.shape[1]
+        g = q.shape[2] // hloc
+        qf = q[:, 0].astype(jnp.float32).reshape(B, hloc, g, -1)
+        s0 = jnp.einsum("bhgd,bhd->bhg", qf,
+                        kn[:, 0].astype(jnp.float32)) * scale
+        s0 = s0.reshape(B, -1)
+        m2 = jnp.maximum(m, s0)
+        wp, wc = jnp.exp(m - m2), jnp.exp(s0 - m2)
+        vb = jnp.broadcast_to(vn[:, 0, :, None].astype(jnp.float32),
+                              (B, hloc, g, vn.shape[-1])).reshape(
+                                  B, q.shape[2], -1)
+        o = acc * wp[..., None] + vb * wc[..., None]
+        ls = l * wp + wc
+        out = o / jnp.maximum(ls, 1e-30)[..., None]
+        return out[:, None].astype(q.dtype)
+
+    out = shard_map(body, mesh=layout.mesh,
+                    in_specs=(qspec, nspec, nspec, kspec, kspec, pspec,
+                              P(layout.batch_spec(), None),
+                              P(layout.batch_spec())),
+                    out_specs=qspec, check_vma=False)(
+        q, k_new, v_new, cache["k"], cache["v"], cache["pos"], tbl, pos)
+    return out, {"k": k_new[:, 0], "v": v_new[:, 0], "pos": pos}
+
+
 def attention_decode(layout: Layout, cfg: ModelConfig, dirs: Dirs,
                      q, k_new, v_new, cache: KVCache, pos, *, window=0):
     """One-token decode: write (k_new, v_new) at ``pos`` into the (possibly
@@ -389,7 +511,7 @@ def mlp_params(layout: Layout, cfg: ModelConfig, dirs: Dirs, d_ff=None, fsdp=Fal
 
 def attn_apply(layout: Layout, cfg: ModelConfig, dirs: Dirs, x, p, positions,
                *, causal=True, window=0, decode=False, cache=None,
-               kv_override=None, return_kv=False):
+               kv_override=None, return_kv=False, page=None):
     """Self (or cross) attention sub-block. Returns (out, new_cache)."""
     d, nh, nkv, dh = cfg.d_model, cfg.n_heads, cfg.n_kv, cfg.head_dim
     hx = layout.size(_head_axes(layout, dirs)[1])
@@ -421,9 +543,14 @@ def attn_apply(layout: Layout, cfg: ModelConfig, dirs: Dirs, x, p, positions,
     new_cache = None
     if decode:
         if kv_override is None:
-            out, new_cache = attention_decode(layout, cfg, dirs, q, k, v, cache,
-                                              positions[:, 0] if positions.ndim > 1 else positions,
-                                              window=window)
+            pvec = positions[:, 0] if positions.ndim > 1 else positions
+            if page is not None:
+                out, new_cache = attention_decode_paged(
+                    layout, cfg, dirs, q, k, v, cache, pvec, page,
+                    window=window)
+            else:
+                out, new_cache = attention_decode(layout, cfg, dirs, q, k, v,
+                                                  cache, pvec, window=window)
         else:
             # cross-attention decode: static kv (encoder states), full attn
             out = _cross_decode(layout, cfg, dirs, q, k, v)
@@ -507,12 +634,12 @@ def dense_block_params(layout: Layout, cfg: ModelConfig, dirs: Dirs,
 
 def dense_block_apply(layout: Layout, cfg: ModelConfig, dirs: Dirs, x, p,
                       positions, *, decode=False, cache=None, window=None,
-                      causal=True, return_kv=False):
+                      causal=True, return_kv=False, page=None):
     w = cfg.window if window is None else window
     h = apply_norm(cfg, x, p["ln1"])
     a, new_cache = attn_apply(layout, cfg, dirs, h, p["attn"], positions,
                               window=w, decode=decode, cache=cache,
-                              causal=causal, return_kv=return_kv)
+                              causal=causal, return_kv=return_kv, page=page)
     x = x + a
     h = apply_norm(cfg, x, p["ln2"])
     x = x + mlp_apply(layout, cfg, dirs, h, p["mlp"], decode=decode)

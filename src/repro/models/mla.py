@@ -83,7 +83,7 @@ def _up(layout: Layout, dirs: Dirs, x, w, decode: bool):
 
 
 def mla_apply(layout: Layout, cfg: ModelConfig, dirs: Dirs, x, p, positions,
-              *, decode=False, cache=None, collect_kv=False):
+              *, decode=False, cache=None, collect_kv=False, page=None):
     """x in block entry layout; returns (out, new_cache).
 
     ``collect_kv`` (prefill only): additionally return the compressed
@@ -110,9 +110,15 @@ def mla_apply(layout: Layout, cfg: ModelConfig, dirs: Dirs, x, p, positions,
     k_rope = apply_rope(k_rope[:, :, None, :], positions, cfg.rope_base)[:, :, 0]
 
     if decode:
-        out, new_cache = _mla_decode(layout, cfg, dirs, q_nope, q_rope, c_kv,
-                                     k_rope, p["w_ukv"], cache,
-                                     positions[:, 0] if positions.ndim > 1 else positions)
+        pvec = positions[:, 0] if positions.ndim > 1 else positions
+        if page is not None:
+            out, new_cache = _mla_decode_paged(layout, cfg, dirs, q_nope,
+                                               q_rope, c_kv, k_rope,
+                                               p["w_ukv"], cache, pvec, page)
+        else:
+            out, new_cache = _mla_decode(layout, cfg, dirs, q_nope, q_rope,
+                                         c_kv, k_rope, p["w_ukv"], cache,
+                                         pvec)
         out = out.reshape(B, S, -1)
     else:
         kv = _up(layout, dirs, c_kv, p["w_ukv"], decode)      # (B,S,nh(dn+dv)/si)
@@ -236,3 +242,99 @@ def _mla_decode(layout: Layout, cfg: ModelConfig, dirs: Dirs, q_nope, q_rope,
                          cache["c_kv"], cache["k_rope"], cache["pos"], pos,
                          w_ukv)
     return out, {"c_kv": cc, "k_rope": ckr, "pos": cpos}
+
+
+def _mla_decode_paged(layout: Layout, cfg: ModelConfig, dirs: Dirs, q_nope,
+                      q_rope, ckv_new, kr_new, w_ukv, cache, pos, page):
+    """Absorbed-weight decode straight against the paged latent pool.
+
+    The latent cache is exactly MQA with one kv head of dim (R + dr):
+    K = concat(c_kv, k_rope) features, V = c_kv, q = concat(absorbed
+    q_latent, q_rope) — so the same paged flash-decode kernel serves MLA,
+    followed by the w_uv down-projection.  The pool's pos leaf starts at -1
+    (unlike the contiguous cache), so the kernel's position mask alone
+    covers unwritten, null-block and recycled entries.
+
+    The pool is READ-ONLY here, exactly as in the dense path
+    (blocks.attention_decode_paged): the kernel attends the written past
+    through (table-column-sharded) residuals and the current latent token
+    is folded into the softmax afterwards; the engine applies every
+    layer's new entries in one batched scatter (kvcache.scatter_step).
+
+    cache: this layer's pool slice {"c_kv": (phys, R), "k_rope": (phys, dr),
+    "pos": (phys,)}; pos: (B,) int32.
+    Returns (out, {"c_kv": (B, R), "k_rope": (B, dr), "pos": (B,)}).
+    """
+    from ..kernels.paged_decode import paged_flash_decode
+
+    m, nh, dn, dr, dv = _m(cfg)
+    seq_ax, head_ax = _head_axes(layout, dirs)
+    gax = _gather_axes(layout, seq_ax)
+    nshards = math.prod(layout.size(a) for a in gax) if gax else 1
+    hx = layout.size(head_ax)
+    scale = 1.0 / math.sqrt(dn + dr)
+    bs = layout.batch_spec()
+    blk = page.block
+    lat_pool = P(None, None)
+
+    # distribute the latent-pool attention by sharding table columns over
+    # the cache-shard axes (null-block padding is masked anyway)
+    tbl = page.tables
+    if nshards > 1 and tbl.shape[1] % nshards:
+        tbl = jnp.pad(tbl, ((0, 0), (0, nshards - tbl.shape[1] % nshards)))
+    nb_loc = tbl.shape[1] // nshards
+
+    qspec = P(bs, None, head_ax, None)
+    nspec = P(bs, None, None)
+    if layout.strategy == "3d":
+        w_spec = P(None, head_ax if layout.inference_opt else (head_ax, "x"))
+    else:
+        w_spec = P(None, "z")
+
+    def body(qn, qr, cn, krn, cc, ckr, cpos, tables, pos, w_ukv):
+        if layout.strategy == "3d" and layout.size("x") > 1 \
+                and not layout.inference_opt:
+            w_ukv = lax.all_gather(w_ukv, "x", axis=1, tiled=True)
+        wk = w_ukv.reshape(m.kv_lora_rank, -1, dn + dv)
+        w_uk, w_uv = wk[..., :dn], wk[..., dn:]               # (R, nh_loc, dn/dv)
+        qc = jnp.einsum("bhd,rhd->bhr", qn[:, 0].astype(F32),
+                        w_uk.astype(F32))                     # (b, nh_loc, R)
+        q_cat = jnp.concatenate([qc, qr[:, 0].astype(F32)], axis=-1)
+        k_pool = jnp.concatenate([cc, ckr], axis=-1)[:, None, :]
+        v_pool = cc[:, None, :]
+        if nshards == 1:
+            tloc = tables
+        else:
+            shard = 0
+            for a in gax:
+                shard = shard * layout.size(a) + lax.axis_index(a)
+            tloc = lax.dynamic_slice_in_dim(tables, shard * nb_loc, nb_loc,
+                                            axis=1)
+        acc, mx, ls = paged_flash_decode(q_cat, k_pool, v_pool, cpos,
+                                         tloc, pos, block=blk, scale=scale,
+                                         return_residuals=True)
+        if nshards > 1:
+            mg = lax.pmax(mx, gax)
+            w = jnp.exp(mx - mg)
+            acc = lax.psum(acc * w[..., None], gax)
+            ls = lax.psum(ls * w, gax)
+            mx = mg
+        # fold the current latent token (always valid: age 0)
+        kcur = jnp.concatenate([cn[:, 0], krn[:, 0]], axis=-1).astype(F32)
+        s0 = jnp.einsum("bhr,br->bh", q_cat, kcur) * scale    # (b, nh_loc)
+        m2 = jnp.maximum(mx, s0)
+        wp, wc = jnp.exp(mx - m2), jnp.exp(s0 - m2)
+        o = (acc * wp[..., None]
+             + cn[:, 0, None, :].astype(F32) * wc[..., None])
+        oc = o / jnp.maximum(ls * wp + wc, 1e-30)[..., None]  # (b, nh_loc, R)
+        o = jnp.einsum("bhr,rhd->bhd", oc.astype(F32), w_uv.astype(F32))
+        return o[:, None].astype(qn.dtype)
+
+    out = shard_map(
+        body, mesh=layout.mesh,
+        in_specs=(qspec, qspec, nspec, nspec, lat_pool, lat_pool, P(None),
+                  P(bs, None), P(bs), w_spec),
+        out_specs=qspec, check_vma=False)(
+        q_nope, q_rope, ckv_new, kr_new, cache["c_kv"], cache["k_rope"],
+        cache["pos"], tbl, pos, w_ukv)
+    return out, {"c_kv": ckv_new[:, 0], "k_rope": kr_new[:, 0], "pos": pos}

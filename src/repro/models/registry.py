@@ -234,18 +234,21 @@ def _attn_block_params(layout, cfg, dirs, d_ff=None):
 
 def _attn_block_apply(layout, cfg, dirs, x, p, positions, *, ctx, shared,
                       decode=False, cache=None, collect_kv=False):
+    # serve hook: when the engine decodes against the paged pool directly,
+    # the block tables ride the frontend ctx (see transformer.forward)
+    page = ctx.get("_page") if decode else None
     if "mla" in p:
         h = B.apply_norm(cfg, x, p["ln1"])
         a, new_cache = mla.mla_apply(layout, cfg, dirs, h, p["mla"], positions,
                                      decode=decode, cache=cache,
-                                     collect_kv=collect_kv)
+                                     collect_kv=collect_kv, page=page)
         x = x + a
         h = B.apply_norm(cfg, x, p["ln2"])
         x = x + B.mlp_apply(layout, cfg, dirs, h, p["mlp"], decode=decode)
         return x, new_cache, _zero()
     x, new_cache = B.dense_block_apply(layout, cfg, dirs, x, p, positions,
                                        decode=decode, cache=cache,
-                                       return_kv=collect_kv)
+                                       return_kv=collect_kv, page=page)
     return x, new_cache, _zero()
 
 
@@ -287,15 +290,17 @@ def _moe_block_params(layout, cfg, dirs):
 
 def _moe_block_apply(layout, cfg, dirs, x, p, positions, *, ctx, shared,
                      decode=False, cache=None, collect_kv=False):
+    page = ctx.get("_page") if decode else None
     h = B.apply_norm(cfg, x, p["ln1"])
     if "mla" in p:
         a, new_cache = mla.mla_apply(layout, cfg, dirs, h, p["mla"], positions,
                                      decode=decode, cache=cache,
-                                     collect_kv=collect_kv)
+                                     collect_kv=collect_kv, page=page)
     else:
         a, new_cache = B.attn_apply(layout, cfg, dirs, h, p["attn"], positions,
                                     window=cfg.window, decode=decode,
-                                    cache=cache, return_kv=collect_kv)
+                                    cache=cache, return_kv=collect_kv,
+                                    page=page)
     x = x + a
     h = B.apply_norm(cfg, x, p["ln2"])
     y, aux = moe_mod.moe_apply(layout, cfg, dirs, h, p["moe"], decode=decode)

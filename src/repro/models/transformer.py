@@ -175,9 +175,14 @@ def forward_pipelined(cfg: ModelConfig, layout: Layout, params, batch):
 # Forward
 # ---------------------------------------------------------------------------
 def forward(cfg: ModelConfig, layout: Layout, params, batch, *, mode: str,
-            cache=None):
+            cache=None, page=None):
     """mode: 'train' -> (loss, metrics); 'prefill' -> (last_logits, cache);
-    'decode' -> (logits, cache)."""
+    'decode' -> (logits, cache).
+
+    ``page`` (decode only, a ``blocks.PageInfo``): decode straight against
+    the paged KV pool — ``cache`` is then the pool tree (leaves
+    (n_layers, phys, ...)) and the returned cache is the updated pool; no
+    gathered view is ever materialized (see serve/engine.py)."""
     if layout.n_stages > 1:
         if mode != "train":
             from ..core.plan import pipeline_mode_error
@@ -190,6 +195,9 @@ def forward(cfg: ModelConfig, layout: Layout, params, batch, *, mode: str,
 
     # ---- frontend (embedding + modality prelude) ----
     x, ctx = stack.frontend(layout, cfg, dirs, params, batch, mode=mode)
+    if decode and page is not None:
+        ctx = dict(ctx)
+        ctx["_page"] = page
     S = x.shape[1]
     if decode:
         positions = batch["pos"][:, None]                      # (B, 1)

@@ -38,6 +38,7 @@ import numpy as np
 from ..config import ModelConfig
 from ..core.params import init_params
 from ..core.topology import Layout
+from ..models import blocks as B
 from ..models import registry, transformer
 from . import kvcache, sampling
 from .metrics import ServeMetrics
@@ -69,12 +70,18 @@ class Engine:
                  temperature: float = 0.0, top_k: int = 0, top_p: float = 0.0,
                  seed: int = 0, block_size: int = 16,
                  n_blocks: Optional[int] = None, prefill_chunk: int = 4096,
-                 chunked_prefill: bool = True):
+                 chunked_prefill: bool = True,
+                 fused_decode: Optional[bool] = None):
         self.cfg, self.layout, self.params = cfg, layout, params
         self.B, self.max_len = batch_size, max_len
         self.temperature = temperature
         self.paged = registry.serve_cache_mode(cfg) == "paged"
         self.chunked = chunked_prefill and self.paged
+        # fused paged decode (default on): attend straight against the pool
+        # through the block tables (kernels/paged_decode.py) instead of
+        # materializing gather_view + scattering the new view back
+        self.fused = (fused_decode if fused_decode is not None
+                      else True) and self.paged
         self.sampler = sampling.make_sampler(temperature, top_k, top_p)
         self._key = jax.random.key(seed)
         self.scheduler = Scheduler(batch_size, max_len,
@@ -106,8 +113,24 @@ class Engine:
     def _build_paged(self):
         cfg, layout, sampler = self.cfg, self.layout, self.sampler
         blk, L = self.kv.block, self.kv.view_len
+        fused = self.fused
 
         def decode_step(params, pool, tok, pos, tables, active, key):
+            if fused:
+                # fused path: the blocks attend the (read-only) pool
+                # directly through the block tables — no gathered view —
+                # and return each layer's new (k, v) entries, written back
+                # here in one batched scatter
+                page = B.PageInfo(tables=tables, active=active, block=blk)
+                logits, upd = transformer.forward(
+                    cfg, layout, params, {"token": tok, "pos": pos},
+                    mode="decode", cache=pool, page=page)
+                rows = jnp.arange(tok.shape[0])
+                slot = pos % L
+                phys = tables[rows, slot // blk] * blk + slot % blk
+                phys = jnp.where(active, phys, blk + rows % blk)
+                pool = kvcache.scatter_step(pool, upd, phys)
+                return sampler(logits.astype(F32), key), pool
             view = kvcache.gather_view(pool, tables, blk)
             logits, new_view = transformer.forward(
                 cfg, layout, params, {"token": tok, "pos": pos},

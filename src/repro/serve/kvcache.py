@@ -121,6 +121,19 @@ def scatter_decode(pool, new_view, slot, phys):
     return jax.tree.map(s, pool, new_view)
 
 
+def scatter_step(pool, updates, phys):
+    """Write one fused decode step's new entries back in a single batched
+    scatter: update leaves (n, B, ...) — the per-layer (k, v, pos) stacks
+    the no-view fused decode collects — land at physical positions ``phys``
+    (B,) int32 (masked lanes point phys at the trash block).  One scatter
+    per leaf for ALL layers, mirroring ``scatter_decode``, instead of a
+    per-layer pool update inside the forward."""
+    def s(pl, up):
+        return pl.at[:, phys].set(up.astype(pl.dtype))
+
+    return jax.tree.map(s, pool, updates)
+
+
 def scatter_prefill(pool, updates, phys_map):
     """Write whole prefill chunks: updates leaves (n, B, S, ...) land at
     flat physical indices ``phys_map`` (B, S) (padding lanes -> trash)."""
