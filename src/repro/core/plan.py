@@ -111,19 +111,36 @@ class ParallelPlan:
     # ---- validation ----
     def validate(self, n_layers: Optional[int] = None,
                  global_batch: Optional[int] = None, model=None,
-                 mode: str = "train") -> "ParallelPlan":
+                 mode: str = "train", draft=None) -> "ParallelPlan":
         """Raise ValueError on illegal compositions, naming the offending
         fields.  ``model`` (a ModelConfig) enables the family-aware checks:
         every registered family pipelines, so the remaining rejections are
         precise (mtp head under pp, too few blocks for the stage count).
         ``mode`` rejects serving plans with pp > 1 at plan time instead of
         deep inside the forward; ``mode='serve'`` with n_stages=1 is legal
-        for every family (``launch/serve.py`` validates with it)."""
+        for every family (``launch/serve.py`` validates with it).
+        ``draft`` (a ModelConfig, mode='serve' only) validates a speculative
+        -decoding pairing at plan time: both models must serve paged
+        non-MLA caches and share a vocab (``serve/speculate.py`` owns the
+        rule; rejected pairings fail here before any device work)."""
         if self.n_stages < 1 or self.microbatches < 1:
             raise ValueError("n_stages and microbatches must be >= 1")
         err = pipeline_mode_error(self.n_stages, mode)
         if err:
             raise ValueError(err)
+        if draft is not None:
+            if mode != "serve":
+                raise ValueError(
+                    f"draft model given with mode={mode!r}: speculative "
+                    "decoding is a serving composition (mode='serve')")
+            if model is None:
+                raise ValueError("draft model given without the target "
+                                 "model config")
+            # lazy import: core must stay importable without serve
+            from ..serve.speculate import draft_unsupported_reason
+            reason = draft_unsupported_reason(model, draft)
+            if reason:
+                raise ValueError(reason)
         if model is not None and self.n_stages > 1:
             # lazy import: core must stay importable without models
             from ..models.registry import pipeline_unsupported_reason

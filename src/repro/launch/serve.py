@@ -48,6 +48,22 @@ def main(argv=None):
     ap.add_argument("--no-fused-decode", action="store_true",
                     help="paged decode via gather_view materialization "
                          "instead of the fused block-table kernel path")
+    ap.add_argument("--prefix-cache", dest="prefix_cache",
+                    action="store_true", default=False,
+                    help="shared-prefix KV reuse: prompts whose prefix is "
+                         "resident enter by block reference (copy-on-write "
+                         "on partial-block divergence)")
+    ap.add_argument("--no-prefix-cache", dest="prefix_cache",
+                    action="store_false")
+    ap.add_argument("--draft", default="",
+                    help="draft model arch for speculative decoding (runs "
+                         "single-device; greedy output stays bit-identical "
+                         "to the non-speculative engine)")
+    ap.add_argument("--spec-tokens", type=int, default=4,
+                    help="draft tokens proposed per speculative step (γ)")
+    ap.add_argument("--shared-prefix", type=int, default=0,
+                    help="prepend this many common tokens to every "
+                         "synthetic request (exercises the prefix cache)")
     ap.add_argument("--host-devices", type=int, default=0)
     args = ap.parse_args(argv)
 
@@ -68,9 +84,15 @@ def main(argv=None):
     cfg = get(args.arch)
     if args.reduced:
         cfg = reduced(cfg)
+    draft_cfg = None
+    if args.draft:
+        draft_cfg = get(args.draft)
+        if args.reduced:
+            draft_cfg = reduced(draft_cfg)
     plan = ParallelPlan(n_dp=args.dp, n_model=args.model,
                         strategy=args.strategy)
-    plan.validate(n_layers=cfg.n_layers, model=cfg, mode="serve")
+    plan.validate(n_layers=cfg.n_layers, model=cfg, mode="serve",
+                  draft=draft_cfg)
     layout = plan.build()
     if args.inference_opt:
         layout = dataclasses.replace(layout, inference_opt=True)
@@ -87,14 +109,28 @@ def main(argv=None):
                 transformer.abstract_params(cfg, layout), layout)
             print(f"restored checkpoint step {last}")
 
+    draft = None
+    if draft_cfg is not None:
+        from repro.core.topology import single_device_layout
+        from repro.serve.speculate import DraftSpec
+        dlay = single_device_layout(args.strategy)
+        dparams = transformer.init(draft_cfg, dlay, jax.random.key(0))
+        draft = DraftSpec(draft_cfg, dlay, dparams, gamma=args.spec_tokens)
+        print(f"draft: {draft_cfg.arch} (single-device), "
+              f"gamma={args.spec_tokens}")
+
     eng = Engine(cfg, layout, params, batch_size=args.batch_size,
                  max_len=args.max_len, temperature=args.temperature,
                  top_k=args.top_k, top_p=args.top_p, seed=args.seed,
                  block_size=args.block_size,
                  prefill_chunk=args.prefill_chunk,
                  chunked_prefill=not args.no_chunked_prefill,
-                 fused_decode=not args.no_fused_decode)
-    reqs = [Request(uid=i, prompt=[2 + (i + j) % 17 for j in range(3 + i % 5)],
+                 fused_decode=not args.no_fused_decode,
+                 prefix_cache=args.prefix_cache, draft=draft)
+    common = [3 + j % 13 for j in range(args.shared_prefix)]
+    reqs = [Request(uid=i,
+                    prompt=common + [2 + (i + j) % 17
+                                     for j in range(3 + i % 5)],
                     max_new=args.max_new,
                     priority=(1 if args.priority and i % args.priority == 0
                               else 0))

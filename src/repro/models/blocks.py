@@ -345,6 +345,97 @@ def attention_decode_paged(layout: Layout, cfg: ModelConfig, dirs: Dirs,
     return out, {"k": k_new[:, 0], "v": v_new[:, 0], "pos": pos}
 
 
+def attention_extend(layout: Layout, cfg: ModelConfig, dirs: Dirs,
+                     q, k_new, v_new, cache, positions, *, window=0):
+    """Multi-token continuation attention: ``S`` fresh tokens per row at
+    per-row position offsets attend to the already-written cache entries
+    (a gathered per-slot view) plus causally to each other.  One entry
+    powers both serving fast paths — prefix-hit tail prefill (attend the
+    shared-prefix kv without recomputing it) and speculative verification
+    (score gamma drafted tokens in one call) — see ``transformer.extend``.
+
+    q/k_new/v_new: (B, S, n, d) rope'd at ``positions`` (B, S) int32
+    (-1 marks padding rows — masked as both queries and keys).  ``cache``:
+    {"k": (B, L, nkv, d), "v": ..., "pos": (B, L)} — entries with
+    cpos < q_pos are attended (strictly less: a re-written boundary entry is
+    counted once, on the self side), everything else (invalid, stale-future)
+    is masked.  Unlike the decode paths nothing is written here; the engine
+    scatters the returned per-layer (k, v) into the pool itself.
+
+    Sharding: q keeps the post-qkv island layout (local sequence chunk per
+    device); k_new/v_new and positions are all-gathered over the sequence
+    axes like training attention; the cache view is small (one slot's
+    blocks) and replicated inside the island, so the full softmax is
+    computed locally and no cross-shard combine is needed.
+    """
+    seq_ax, head_ax = _head_axes(layout, dirs)
+    hx = layout.size(head_ax)
+    kv_sharded = cfg.n_kv % hx == 0 and cfg.n_kv >= hx
+    gax = _gather_axes(layout, seq_ax)
+    group = cfg.n_heads // cfg.n_kv
+    nloc = cfg.n_heads // hx
+
+    qspec = P(layout.batch_spec(), gax or None, head_ax, None)
+    nkvspec = P(layout.batch_spec(), gax or None,
+                head_ax if kv_sharded else None, None)
+    cspec = P(layout.batch_spec(), None, head_ax if kv_sharded else None,
+              None)
+    pspec = P(layout.batch_spec(), gax or None)
+    cpspec = P(layout.batch_spec(), None)
+
+    def body(q, kn, vn, pos, ck, cv, cpos):
+        b, sq, _, d = q.shape
+        qpos = pos
+        if gax:
+            kn = lax.all_gather(kn, gax, axis=1, tiled=True)
+            vn = lax.all_gather(vn, gax, axis=1, tiled=True)
+            kpos = lax.all_gather(pos, gax, axis=1, tiled=True)
+        else:
+            kpos = pos
+        if not kv_sharded and hx > 1:
+            hidx = lax.axis_index(head_ax) if head_ax else 0
+            kv0 = (hidx * nloc) // group
+            nkv_loc = max(1, nloc // group)
+            kn = lax.dynamic_slice_in_dim(kn, kv0, nkv_loc, axis=2)
+            vn = lax.dynamic_slice_in_dim(vn, kv0, nkv_loc, axis=2)
+            ck = lax.dynamic_slice_in_dim(ck, kv0, nkv_loc, axis=2)
+            cv = lax.dynamic_slice_in_dim(cv, kv0, nkv_loc, axis=2)
+        nkv_l = ck.shape[2]
+        scale = 1.0 / math.sqrt(d)
+        qf = (q.astype(F32) * scale).reshape(b, sq, nkv_l, nloc // nkv_l, d)
+        ka = jnp.concatenate([ck.astype(F32), kn.astype(F32)], axis=1)
+        va = jnp.concatenate([cv.astype(F32), vn.astype(F32)], axis=1)
+        s = jnp.einsum("bqhgd,bkhd->bqhgk", qf, ka)
+        # cache entries are valid only strictly before the row's FIRST
+        # fresh position (qpos[:, 0]): anything at or past it is stale —
+        # e.g. kv a previous speculative verify wrote then rejected — and
+        # the fresh tokens themselves arrive via the self path below
+        first = qpos[:, :1]
+        mc = ((cpos >= 0)[:, None, :]
+              & (cpos[:, None, :] < first[:, :, None])
+              & (qpos >= 0)[:, :, None])
+        ms = ((kpos >= 0)[:, None, :]
+              & (kpos[:, None, :] <= qpos[:, :, None])
+              & (qpos >= 0)[:, :, None])
+        if window:
+            mc = mc & (qpos[:, :, None] - cpos[:, None, :] < window)
+            ms = ms & (qpos[:, :, None] - kpos[:, None, :] < window)
+        mask = jnp.concatenate([mc, ms], axis=2)
+        s = jnp.where(mask[:, :, None, None, :], s, NEG_INF)
+        m = jnp.max(s, axis=-1)
+        p = jnp.exp(s - m[..., None])
+        l_s = jnp.sum(p, axis=-1)
+        o = jnp.einsum("bqhgk,bkhd->bqhgd", p, va)
+        out = (o / jnp.maximum(l_s, 1e-30)[..., None]).reshape(b, sq, nloc, d)
+        return out.astype(q.dtype)
+
+    return shard_map(body, mesh=layout.mesh,
+                     in_specs=(qspec, nkvspec, nkvspec, pspec,
+                               cspec, cspec, cpspec),
+                     out_specs=qspec, check_vma=False)(
+        q, k_new, v_new, positions, cache["k"], cache["v"], cache["pos"])
+
+
 def attention_decode(layout: Layout, cfg: ModelConfig, dirs: Dirs,
                      q, k_new, v_new, cache: KVCache, pos, *, window=0):
     """One-token decode: write (k_new, v_new) at ``pos`` into the (possibly
@@ -554,6 +645,13 @@ def attn_apply(layout: Layout, cfg: ModelConfig, dirs: Dirs, x, p, positions,
         else:
             # cross-attention decode: static kv (encoder states), full attn
             out = _cross_decode(layout, cfg, dirs, q, k, v)
+    elif cache is not None and kv_override is None:
+        # extend: S fresh tokens continuing past a gathered cache view —
+        # the serving fast path for prefix-hit tails and speculative verify
+        out = attention_extend(layout, cfg, dirs, q, k, v, cache, positions,
+                               window=window)
+        if return_kv:
+            new_cache = (k, v)
     else:
         out = attention(layout, cfg, dirs, q, k, v, causal=causal, window=window)
         if return_kv:

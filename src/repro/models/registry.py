@@ -169,11 +169,15 @@ def _vlm_frontend(layout, cfg, dirs, params, batch, *, mode):
 
 
 def _vlm_labels(cfg, batch):
+    # Pad the vision positions with jnp.pad rather than concatenating a
+    # freshly created zeros block: concatenate([single-device zeros,
+    # seq-sharded labels]) mis-reshards on cubes with a replicated model
+    # axis (observed on (1,2,2): label values arrive summed across the
+    # replicas, indexing past the vocab and turning the masked loss NaN).
     labels = batch["labels"]
-    pad = jnp.zeros((labels.shape[0], cfg.n_vision_tokens), labels.dtype)
-    mask = jnp.concatenate([jnp.zeros(pad.shape, F32),
-                            jnp.ones(labels.shape, F32)], axis=1)
-    return jnp.concatenate([pad, labels], axis=1), mask
+    nv = cfg.n_vision_tokens
+    mask = jnp.pad(jnp.ones(labels.shape, F32), ((0, 0), (nv, 0)))
+    return jnp.pad(labels, ((0, 0), (nv, 0))), mask
 
 
 def _vlm_mb_weight(cfg, mb):
@@ -643,7 +647,7 @@ def run_stack(stack: BlockStack, layout: Layout, cfg: ModelConfig, dirs: Dirs,
         kind = stack.kinds[kname]
         off = offs.get(kname, 0)
         offs[kname] = off + n
-        use_cache = decode and kind.cache is not None
+        use_cache = (decode or mode == "extend") and kind.cache is not None
         apply = functools.partial(kind.apply, layout, cfg, dirs)
 
         if kind.params is None:

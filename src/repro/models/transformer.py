@@ -356,6 +356,50 @@ def prefill(cfg: ModelConfig, layout: Layout, params, batch):
     return logits[:, 0], kv
 
 
+def extend(cfg: ModelConfig, layout: Layout, params, batch, view):
+    """Multi-token continuation past an existing cache view: the serving
+    fast path shared by prefix-hit tail prefill and speculative verify.
+
+    ``batch``: {"tokens": (B, S) int32 right-padded fresh tokens,
+    "offset": (B,) int32 absolute position of each row's first fresh token,
+    "length": (B,) int32 count of valid fresh tokens (0 = inactive row)}.
+    ``view``: a gathered per-kind cache tree as produced for decode
+    ({kind: {"k", "v", "pos"}}); rows the view marks pos=-1 are ignored, so
+    a cold row (offset 0 over a cleared view) degenerates to plain prefill.
+
+    Returns ``(logits, kv, positions)``: full-vocab logits for every fresh
+    position (B, S, V) — the verify step needs all of them, the tail-prefill
+    step takes the last valid row — the collected kv streams for
+    ``registry.pack_prefill_cache`` (padding rows carry position -1 and are
+    dropped by the masked scatter), and the (B, S) absolute positions.
+    """
+    if layout.n_stages > 1:
+        from ..core.plan import pipeline_mode_error
+        raise ValueError(pipeline_mode_error(layout.n_stages, "extend"))
+    if registry.serve_cache_mode(cfg) != "paged":
+        raise ValueError(
+            f"extend: family {cfg.family} serves with recurrent state, not a "
+            "kv view; only 'paged' families support multi-token continuation")
+    if cfg.mla is not None:
+        raise NotImplementedError(
+            "extend: MLA latent caches have no gathered-view continuation "
+            "path yet; serve MLA models without --prefix-cache/--draft")
+    stack = registry.get_stack(cfg.family)
+    dirs = entry_dirs()
+    x, ctx = stack.frontend(layout, cfg, dirs, params, batch, mode="prefill")
+    S = x.shape[1]
+    i = jnp.arange(S, dtype=jnp.int32)
+    positions = jnp.where(i[None, :] < batch["length"][:, None],
+                          batch["offset"][:, None] + i[None, :], -1)
+    x, kv, _ = registry.run_stack(
+        stack, layout, cfg, dirs, x, params, positions, ctx=ctx,
+        shared=params.get("shared", {}), mode="extend", cache=view,
+        remat=False, collect_kv=True)
+    x = B.apply_norm(cfg, x, params["ln_f"])
+    logits, _ = plinear(layout, dirs, x, params["head"], kind="first")
+    return logits, kv, positions
+
+
 # ---------------------------------------------------------------------------
 # Caches
 # ---------------------------------------------------------------------------

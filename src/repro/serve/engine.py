@@ -40,9 +40,9 @@ from ..core.params import init_params
 from ..core.topology import Layout
 from ..models import blocks as B
 from ..models import registry, transformer
-from . import kvcache, sampling
+from . import kvcache, sampling, speculate
 from .metrics import ServeMetrics
-from .scheduler import Scheduler
+from .scheduler import Scheduler, pad_bucket
 
 F32 = jnp.float32
 
@@ -71,7 +71,9 @@ class Engine:
                  seed: int = 0, block_size: int = 16,
                  n_blocks: Optional[int] = None, prefill_chunk: int = 4096,
                  chunked_prefill: bool = True,
-                 fused_decode: Optional[bool] = None):
+                 fused_decode: Optional[bool] = None,
+                 prefix_cache: bool = False,
+                 draft: Optional["speculate.DraftSpec"] = None):
         self.cfg, self.layout, self.params = cfg, layout, params
         self.B, self.max_len = batch_size, max_len
         self.temperature = temperature
@@ -82,6 +84,29 @@ class Engine:
         # materializing gather_view + scattering the new view back
         self.fused = (fused_decode if fused_decode is not None
                       else True) and self.paged
+        if prefix_cache:
+            if not (self.paged and self.chunked):
+                raise ValueError(
+                    "prefix_cache requires a paged family with chunked "
+                    "prefill (the shared blocks enter via the block tables)")
+            if cfg.mla is not None:
+                raise ValueError(
+                    "prefix_cache: MLA latent caches have no extend path "
+                    "yet; serve this model without --prefix-cache")
+        self.prefix = bool(prefix_cache)
+        if draft is not None:
+            reason = speculate.draft_unsupported_reason(cfg, draft.cfg)
+            if reason:
+                raise ValueError(reason)
+            if not self.chunked:
+                raise ValueError("speculative decoding requires chunked "
+                                 "prefill (the verify step extends the "
+                                 "paged pool)")
+            if temperature > 0 and (top_k or top_p):
+                raise ValueError(
+                    "speculative decoding keeps the sampled distribution "
+                    "exact only for greedy or plain-temperature sampling; "
+                    "drop top_k/top_p or --draft")
         self.sampler = sampling.make_sampler(temperature, top_k, top_p)
         self._key = jax.random.key(seed)
         self.scheduler = Scheduler(batch_size, max_len,
@@ -97,10 +122,20 @@ class Engine:
         if self.paged:
             self.kv = kvcache.PagedKVCache(cfg, layout, batch_size, max_len,
                                            block=block_size,
-                                           n_blocks=n_blocks, dtype=dtype)
+                                           n_blocks=n_blocks, dtype=dtype,
+                                           prefix_cache=self.prefix)
             self.pool = self.kv.init_pool()
             self._build_paged()
+            self.spec = (draft.build(batch_size, max_len, temperature)
+                         if draft is not None else None)
+            if self.spec is not None:
+                self._verify = jax.jit(
+                    speculate.make_verify(cfg, layout, self.kv.block,
+                                          self.spec.gamma, self._spec_pad(),
+                                          temperature),
+                    donate_argnums=(1,))
         else:
+            self.spec = None
             tree = kvcache.cache_with_dtype(
                 transformer.abstract_cache(cfg, layout, batch_size, max_len),
                 dtype)
@@ -151,9 +186,31 @@ class Engine:
             pool = kvcache.scatter_prefill(pool, updates, phys_map)
             return sampler(logits.astype(F32), key), pool
 
+        def extend_step(params, pool, tokens, offset, length, tables,
+                        phys_map, key):
+            # prefix-hit tail prefill: only the un-hit prompt tail runs the
+            # forward, attending the shared blocks through the view
+            view = kvcache.gather_view(pool, tables, blk)
+            logits, kv, positions = transformer.extend(
+                cfg, layout, params,
+                {"tokens": tokens, "offset": offset, "length": length}, view)
+            updates = registry.pack_prefill_cache(cfg, kv, positions)
+            pool = kvcache.scatter_prefill(pool, updates, phys_map)
+            idx = jnp.clip(length - 1, 0, tokens.shape[1] - 1)
+            last = jnp.take_along_axis(logits, idx[:, None, None],
+                                       axis=1)[:, 0]
+            return sampler(last.astype(F32), key), pool
+
         self._decode = jax.jit(decode_step, donate_argnums=(1,))
         self._prefill = jax.jit(prefill_step, donate_argnums=(1,))
+        self._extendf = jax.jit(extend_step, donate_argnums=(1,))
+        self._copy = jax.jit(kvcache.copy_block, donate_argnums=(0,))
         self._clear = jax.jit(kvcache.clear_positions, donate_argnums=(0,))
+
+    def _spec_pad(self) -> int:
+        """Verify-batch padded length: γ+1 rounded to the prefill buckets
+        (sharding-divisible on every supported mesh)."""
+        return pad_bucket(self.spec.gamma + 1)
 
     def _build_contiguous(self):
         cfg, layout, sampler = self.cfg, self.layout, self.sampler
@@ -193,22 +250,54 @@ class Engine:
     def _can_place(self, req: Request, slot: int) -> bool:
         if not self.paged:
             return True
-        return self.kv.can_admit(len(req.prompt) + req.max_new)
+        return self.kv.can_admit(len(req.prompt) + req.max_new,
+                                 req.prompt if self.prefix else None)
 
     def _admit(self):
         free = [i for i in range(self.B) if self.slots[i] is None]
         placed = self.scheduler.fill(free, self._can_place)
+        admitted = []
         for slot, req in placed:
             self.slots[slot] = req
             self.pos[slot] = 0
             req._fed = 0
             if self.paged:
-                ok = self.kv.admit(slot, len(req.prompt) + req.max_new)
-                assert ok, "can_place admitted a request the pool rejects"
+                ok = self.kv.admit(slot, len(req.prompt) + req.max_new,
+                                   req.prompt if self.prefix else None)
+                if not ok:
+                    # the free count moved between can_place and admit (an
+                    # earlier same-tick admission shrank this prompt's
+                    # prefix hit, so it now needs more private blocks):
+                    # requeue at the head, no state half-applied
+                    self.slots[slot] = None
+                    self.scheduler.pending_prefill.remove(slot)
+                    q = (self.scheduler.prio if req.priority > 0
+                         else self.scheduler.fifo)
+                    q.appendleft(req)
+                    continue
+            admitted.append((slot, req))
+        placed = admitted
         if placed and self.paged:
-            # invalidate recycled blocks before anything reads them
+            # invalidate recycled blocks before anything reads them (the
+            # clear covers only the slots' PRIVATE blocks — shared prefix
+            # blocks keep their content), then materialize any pending
+            # copy-on-write divergence into the first private block
             idx = self.kv.clear_targets([s for s, _ in placed])
             self.pool = self._clear(self.pool, idx)
+            if self.prefix:
+                cow = self.kv.cow_rows([s for s, _ in placed])
+                if cow is not None:
+                    src, dst, keep = cow
+                    self.pool = self._copy(self.pool, jnp.asarray(src),
+                                           jnp.asarray(dst),
+                                           jnp.asarray(keep))
+                for s, _ in placed:
+                    self.kv.cow_done(s)
+            if self.spec is not None:
+                mask = np.zeros((self.B,), bool)
+                for s, _ in placed:
+                    mask[s] = True
+                self.spec.reset(jnp.asarray(mask))
         elif placed:
             mask = np.zeros((self.B,), bool)
             for s, _ in placed:
@@ -246,6 +335,9 @@ class Engine:
         if self.chunked and self.scheduler.pending_prefill:
             self._prefill_tick()
             kind = "prefill"
+        elif self.spec is not None:
+            self._spec_tick()
+            kind = "decode"
         else:
             self._decode_tick()
             kind = "decode"
@@ -253,25 +345,61 @@ class Engine:
         self.steps += 1
 
     def _prefill_tick(self):
+        # with the prefix cache on, each slot only prefills its un-hit
+        # tail: grouping / padding / the token budget all run on the tail
+        # length, which is where the TTFT win comes from
         lens = {s: len(self.slots[s].prompt)
+                - (self.kv.hit_len(s) if self.prefix else 0)
                 for s in self.scheduler.pending_prefill}
         group, s_pad = self.scheduler.prefill_group(lens)
         tokens = np.zeros((self.B, s_pad), np.int32)
         length = np.zeros((self.B,), np.int32)
-        for s in group:
-            p = self.slots[s].prompt
-            tokens[s, :len(p)] = p
-            length[s] = len(p)
-        phys_map = self.kv.prefill_phys_map({s: lens[s] for s in group}, s_pad)
-        tok, self.pool = self._prefill(self.params, self.pool,
-                                       jnp.asarray(tokens),
-                                       jnp.asarray(length), phys_map,
-                                       self._split_key())
+        if self.prefix:
+            offset = np.zeros((self.B,), np.int32)
+            for s in group:
+                p = self.slots[s].prompt
+                hit = self.kv.hit_len(s)
+                tokens[s, :len(p) - hit] = p[hit:]
+                offset[s] = hit
+                length[s] = len(p) - hit
+            phys_map = self.kv.extend_phys_map(
+                {s: (int(offset[s]), int(length[s])) for s in group}, s_pad)
+            tok, self.pool = self._extendf(
+                self.params, self.pool, jnp.asarray(tokens),
+                jnp.asarray(offset), jnp.asarray(length),
+                self.kv.tables_device(), phys_map, self._split_key())
+        else:
+            for s in group:
+                p = self.slots[s].prompt
+                tokens[s, :len(p)] = p
+                length[s] = len(p)
+            phys_map = self.kv.prefill_phys_map(
+                {s: lens[s] for s in group}, s_pad)
+            tok, self.pool = self._prefill(self.params, self.pool,
+                                           jnp.asarray(tokens),
+                                           jnp.asarray(length), phys_map,
+                                           self._split_key())
+        if self.spec is not None:
+            # the draft prefills the FULL prompt into its private cache —
+            # its cache has no prefix sharing, and the propose bursts need
+            # the whole context resident
+            d_pad = pad_bucket(max(len(self.slots[s].prompt) for s in group))
+            dtok = np.zeros((self.B, d_pad), np.int32)
+            dlen = np.zeros((self.B,), np.int32)
+            for s in group:
+                p = self.slots[s].prompt
+                dtok[s, :len(p)] = p
+                dlen[s] = len(p)
+            self.spec.prefill(jnp.asarray(dtok), jnp.asarray(dlen))
         tok = np.asarray(jax.device_get(tok))
         for s in group:
             req = self.slots[s]
             self.pos[s] = len(req.prompt)
             req._fed = len(req.prompt)
+            if self.prefix:
+                # publish this prompt's full blocks before any possible
+                # release below — completed requests still seed the index
+                self.kv.register_prefix(s)
             req.out.append(int(tok[s]))
             self.metrics.token(req.uid)
             if len(req.out) >= req.max_new or self.pos[s] >= self.max_len - 1:
@@ -316,6 +444,66 @@ class Engine:
             if len(req.out) >= req.max_new or self.pos[i] >= self.max_len - 1:
                 self._finish(i)
 
+    def _spec_tick(self):
+        """One speculative decode round: the draft bursts γ proposals per
+        active slot, the target verifies them in one batched extend, and
+        each row emits ``accepted + 1`` tokens (accepted drafts + bonus)."""
+        gamma = self.spec.gamma
+        t0 = np.zeros((self.B,), np.int32)
+        tprev = np.zeros((self.B,), np.int32)
+        posv = np.ones((self.B,), np.int32)
+        limit = np.zeros((self.B,), np.int32)
+        active = np.zeros((self.B,), bool)
+        pending = set(self.scheduler.pending_prefill)
+        rows = {}
+        for i, req in enumerate(self.slots):
+            if req is None or i in pending or not req.out:
+                continue
+            t0[i] = req.out[-1]
+            tprev[i] = req.out[-2] if len(req.out) >= 2 else req.prompt[-1]
+            posv[i] = self.pos[i]
+            # emit at most limit+1 tokens: stay under max_new AND under the
+            # decode length bound (pos must end < max_len - 1, matching the
+            # non-speculative finish condition)
+            limit[i] = max(min(req.max_new - len(req.out),
+                               self.max_len - 1 - self.pos[i]) - 1, 0)
+            active[i] = True
+            rows[i] = (int(self.pos[i]), gamma + 1)
+        if not active.any():
+            return
+        drafts, qprobs = self.spec.propose(jnp.asarray(tprev),
+                                           jnp.asarray(t0), jnp.asarray(posv),
+                                           self._split_key())
+        # the draft lives on its own (typically single-device) mesh; its
+        # outputs are committed there — hop through the host so the verify
+        # jit can place them on the target's mesh.  The verify batch
+        # [t0, d_1..d_γ, pad] is assembled here too (see make_verify: a
+        # device-side concatenate mis-reshards on multi-device meshes)
+        drafts = np.asarray(jax.device_get(drafts))
+        qprobs = np.asarray(jax.device_get(qprobs))
+        vtok = np.zeros((self.B, self._spec_pad()), np.int32)
+        vtok[:, 0] = t0
+        vtok[:, 1:gamma + 1] = drafts
+        phys_map = self.kv.extend_phys_map(rows, self._spec_pad())
+        a, emit, self.pool = self._verify(
+            self.params, self.pool, jnp.asarray(vtok), drafts, qprobs,
+            jnp.asarray(posv), jnp.asarray(np.where(active, gamma + 1, 0)
+                                           .astype(np.int32)),
+            self.kv.tables_device(), phys_map, jnp.asarray(limit),
+            self._split_key())
+        a = np.asarray(jax.device_get(a))
+        emit = np.asarray(jax.device_get(emit))
+        for i, req in enumerate(self.slots):
+            if req is None or not active[i]:
+                continue
+            n = int(a[i]) + 1
+            req.out.extend(int(t) for t in emit[i, :n])
+            self.metrics.token(req.uid, n)
+            self.metrics.spec_accept(int(a[i]))
+            self.pos[i] += n
+            if len(req.out) >= req.max_new or self.pos[i] >= self.max_len - 1:
+                self._finish(i)
+
     # ------------------------------------------------------------------
     def _busy(self) -> bool:
         return (self.scheduler.has_queued()
@@ -327,6 +515,9 @@ class Engine:
         # drops the previous run's tracking, so a long-lived engine doesn't
         # accumulate per-request state across runs)
         self.metrics = ServeMetrics()
+        if self.paged:
+            self.kv.lookups = self.kv.hits = self.kv.tokens_reused = 0
+            self.kv.allocator.evictions = 0
         for r in requests:
             self.submit(r)
         t0 = time.time()
@@ -336,6 +527,10 @@ class Engine:
             if progress and (self.steps - start) % 16 == 0:
                 progress(self.steps)
         wall = time.time() - t0
+        if self.paged:
+            self.metrics.prefix_stats(self.kv.lookups, self.kv.hits,
+                                      self.kv.tokens_reused,
+                                      self.kv.allocator.evictions)
         stats = self.metrics.summary(wall)
         stats.update(steps=self.steps - start, wall_s=wall,
                      tokens=sum(len(r.out) for r in requests))

@@ -55,6 +55,13 @@ class ServeMetrics:
         self.queue_depths: List[int] = []
         self.prefill_steps = 0
         self.decode_steps = 0
+        # prefix-sharing counters (engine copies them from the kv manager)
+        self.prefix_lookups = 0
+        self.prefix_hits = 0
+        self.prefix_tokens_reused = 0
+        self.evictions = 0
+        # accepted-draft lengths, one entry per speculative verify per row
+        self.accepted: List[int] = []
 
     # ---- request lifecycle ----
     def submit(self, uid: int):
@@ -76,6 +83,17 @@ class ServeMetrics:
 
     def finish(self, uid: int):
         self.completed += 1
+
+    def spec_accept(self, n: int):
+        """Record one verify outcome: n drafts accepted (0..γ)."""
+        self.accepted.append(int(n))
+
+    def prefix_stats(self, lookups: int, hits: int, tokens_reused: int,
+                     evictions: int):
+        self.prefix_lookups = lookups
+        self.prefix_hits = hits
+        self.prefix_tokens_reused = tokens_reused
+        self.evictions = evictions
 
     # ---- engine step ----
     def observe_step(self, queue_depth: int, kind: str):
@@ -110,6 +128,16 @@ class ServeMetrics:
             "tpot_hist": histogram(tpot),
             "prefill_steps": self.prefill_steps,
             "decode_steps": self.decode_steps,
+            "prefix_lookups": self.prefix_lookups,
+            "prefix_hits": self.prefix_hits,
+            "prefix_hit_rate": (self.prefix_hits / self.prefix_lookups
+                                if self.prefix_lookups else 0.0),
+            "prefix_tokens_reused": self.prefix_tokens_reused,
+            "evictions": self.evictions,
+            "spec_steps": len(self.accepted),
+            "accepted_mean": (float(np.mean(self.accepted))
+                              if self.accepted else 0.0),
+            "accepted_hist": histogram([float(a) for a in self.accepted]),
         }
 
 
@@ -123,4 +151,12 @@ def format_summary(s: dict) -> str:
         f"  TPOT p50 {s['tpot_p50_s']*1e3:7.1f} ms   "
         f"p95 {s['tpot_p95_s']*1e3:7.1f} ms\n"
         f"  steps: {s['prefill_steps']} prefill + {s['decode_steps']} decode"
-        f"   queue depth max {s['queue_depth_max']}")
+        f"   queue depth max {s['queue_depth_max']}"
+        + (f"\n  prefix cache: {s['prefix_hits']}/{s['prefix_lookups']} hits"
+           f" ({s['prefix_hit_rate']:.0%}), "
+           f"{s['prefix_tokens_reused']} tokens reused, "
+           f"{s['evictions']} evictions"
+           if s.get("prefix_lookups") else "")
+        + (f"\n  speculative: {s['spec_steps']} verifies, mean accepted "
+           f"{s['accepted_mean']:.2f} drafts"
+           if s.get("spec_steps") else ""))

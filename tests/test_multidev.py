@@ -112,3 +112,51 @@ def test_multidev_battery():
                           capture_output=True, text=True, timeout=3000)
     assert proc.returncode == 0, proc.stdout[-4000:] + proc.stderr[-4000:]
     assert "ALL-OK" in proc.stdout
+
+
+# Regression fence: the VLM label construction once concatenated a
+# replicated zeros block with seq-sharded labels; on a cube with a seq-
+# sharding degree (e.g. (1,2,2)) the partitioner mis-resharded the concat
+# (values summed across replicas), driving take_along_axis out of range and
+# the loss to NaN.  _vlm_labels now builds the label row with jnp.pad; this
+# pins that behaviour on the exact failing layout.
+VLM_CUBE_SCRIPT = r"""
+import jax, jax.numpy as jnp
+from repro.config import reduced
+from repro.configs.registry import get
+from repro.core.topology import make_layout, single_device_layout
+from repro.models import transformer
+
+assert len(jax.devices()) == 4, jax.devices()
+cfg = reduced(get("internvl2-2b"))
+lay = make_layout(1, 1, 4, "3d", cube=(1, 2, 2))
+assert lay.cube == (1, 2, 2)
+params = transformer.init(cfg, lay, jax.random.key(0))
+B, S = 4, 64
+nv = cfg.n_vision_tokens
+batch = {
+    "tokens": jax.random.randint(jax.random.key(3), (B, S - nv), 0, cfg.vocab),
+    "labels": jax.random.randint(jax.random.key(4), (B, S - nv), 0, cfg.vocab),
+    "patch_embeds": jax.random.normal(jax.random.key(5), (B, nv, cfg.d_model),
+                                      jnp.bfloat16),
+}
+loss, _ = jax.jit(lambda p, b: transformer.forward(
+    cfg, lay, p, b, mode="train"))(params, batch)
+assert jnp.isfinite(loss), f"VLM loss not finite on cube (1,2,2): {loss}"
+ref, _ = jax.jit(lambda p, b: transformer.forward(
+    cfg, single_device_layout("3d"), p, b, mode="train"))(
+        jax.device_get(params), batch)
+assert abs(float(loss) - float(ref)) < 3e-2, (float(loss), float(ref))
+print("ALL-OK")
+"""
+
+
+@pytest.mark.slow
+def test_vlm_train_cube_1_2_2_regression():
+    env = dict(os.environ,
+               XLA_FLAGS="--xla_force_host_platform_device_count=4",
+               PYTHONPATH=os.path.join(ROOT, "src"))
+    proc = subprocess.run([sys.executable, "-c", VLM_CUBE_SCRIPT], env=env,
+                          capture_output=True, text=True, timeout=1200)
+    assert proc.returncode == 0, proc.stdout[-3000:] + proc.stderr[-3000:]
+    assert "ALL-OK" in proc.stdout

@@ -141,3 +141,61 @@ def test_xent_matches_log_softmax(v, seed):
     want = -jnp.mean(jnp.take_along_axis(
         jax.nn.log_softmax(logits, axis=-1), labels[..., None], axis=-1))
     np.testing.assert_allclose(float(got), float(want), rtol=1e-5, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# serving: ref-counted block allocator (prefix-sharing substrate)
+# ---------------------------------------------------------------------------
+@given(ops=st.lists(st.tuples(st.integers(0, 2), st.integers(0, 40),
+                              st.booleans()), max_size=120),
+       n_blocks=st.integers(3, 16))
+@settings(max_examples=80, deadline=None)
+def test_block_allocator_never_double_frees_or_leaks(ops, n_blocks):
+    """Drive BlockAllocator with an arbitrary op sequence against a pure
+    refcount model: a block with refcount > 0 is never handed out, every
+    release balances an alloc/acquire, and draining returns the allocator
+    to a fully free state."""
+    from repro.serve.kvcache import BlockAllocator, RESERVED
+    a = BlockAllocator(n_blocks)
+    usable = n_blocks - RESERVED
+    ref = {}
+    cached = []
+    for op, x, flag in ops:
+        if op == 0:                              # alloc 1..3 blocks
+            got = a.alloc(1 + x % 3)
+            if got is None:
+                assert usable - len(ref) < 1 + x % 3
+            else:
+                for b in got:
+                    assert RESERVED <= b < n_blocks
+                    assert b not in ref, "live block handed out twice"
+                    if b in cached:
+                        cached.remove(b)
+                    ref[b] = 1
+        elif op == 1 and (ref or cached):        # acquire live/cached
+            pool = sorted(ref) + cached
+            b = pool[x % len(pool)]
+            a.acquire(b)
+            if b in cached:
+                cached.remove(b)
+                ref[b] = 1
+            else:
+                ref[b] += 1
+        elif op == 2 and ref:                    # release one reference
+            b = sorted(ref)[x % len(ref)]
+            a.release(b, cache=flag)
+            ref[b] -= 1
+            if ref[b] == 0:
+                del ref[b]
+                if flag:
+                    cached.append(b)
+        a.check()
+        assert a._ref == ref
+        assert a.n_free == usable - len(ref)
+    for b in sorted(ref):                        # drain: nothing leaks
+        for _ in range(ref.pop(b)):
+            a.release(b)
+    a.check()
+    assert a.n_free == usable
+    with pytest.raises(ValueError):
+        a.release(RESERVED)                      # free block: double free

@@ -301,3 +301,239 @@ def test_serve_engine_multidev_cube():
                           capture_output=True, text=True, timeout=3000)
     assert proc.returncode == 0, proc.stdout[-3000:] + proc.stderr[-2000:]
     assert "ALL-OK" in proc.stdout
+
+
+# ---------------------------------------------------------------------------
+# Ref-counting / LRU allocator (prefix sharing substrate)
+# ---------------------------------------------------------------------------
+def test_block_allocator_refcount_lru():
+    from repro.serve.kvcache import BlockAllocator, RESERVED
+    a = BlockAllocator(8)                       # 6 usable
+    evicted = []
+    a.on_evict = evicted.append
+    b1, b2 = a.alloc(1), a.alloc(1)
+    (b1,), (b2,) = b1, b2
+    a.acquire(b1)                               # second owner
+    assert a.refcount(b1) == 2
+    a.release(b1)
+    assert a.refcount(b1) == 1                  # still live: not allocatable
+    got = a.alloc(4)
+    assert got is not None and b1 not in got and b2 not in got
+    assert a.alloc(1) is None                   # all 6 live
+    a.release(b1, cache=True)                   # park on the LRU
+    assert a.refcount(b1) == 0 and a.n_free == 1
+    a.acquire(b1)                               # prefix hit revives it
+    assert a.refcount(b1) == 1 and a.n_free == 0
+    a.release(b1, cache=True)
+    a.release(b2, cache=True)                   # LRU order: b1 older than b2
+    (victim,) = a.alloc(1)
+    assert victim == b1 and evicted == [b1]     # oldest evicted, hook fired
+    assert a.evictions == 1
+    with pytest.raises(ValueError):
+        a.acquire(victim + 100)                 # foreign block
+    a.check()
+
+
+def test_block_allocator_random_walk():
+    """Seeded random acquire/release/alloc walk against a pure-python
+    refcount model: never double-hands a block, never leaks."""
+    from repro.serve.kvcache import BlockAllocator, RESERVED
+    rng = np.random.default_rng(7)
+    a = BlockAllocator(12)
+    ref = {}                                    # model: block -> refcount
+    cached = []
+    for _ in range(400):
+        op = rng.integers(0, 4)
+        if op == 0:                             # alloc
+            n = int(rng.integers(1, 4))
+            got = a.alloc(n)
+            if got is None:
+                # allocatable = everything not live (cached blocks evictable)
+                assert 12 - 2 - len(ref) < n
+            else:
+                for b in got:
+                    assert b not in ref, "live block handed out twice"
+                    if b in cached:
+                        cached.remove(b)
+                    ref[b] = 1
+        elif op == 1 and ref:                   # release a live ref
+            b = int(rng.choice(sorted(ref)))
+            cache = bool(rng.integers(0, 2))
+            a.release(b, cache=cache)
+            ref[b] -= 1
+            if ref[b] == 0:
+                del ref[b]
+                if cache:
+                    cached.append(b)
+        elif op == 2 and (ref or cached):       # acquire live or cached
+            pool = sorted(ref) + cached
+            b = int(rng.choice(pool))
+            a.acquire(b)
+            if b in cached:
+                cached.remove(b)
+                ref[b] = 1
+            else:
+                ref[b] += 1
+        else:                                   # cross-check
+            a.check()
+            assert {b: c for b, c in ref.items()} == a._ref
+            assert a.n_free == 12 - 2 - len(ref)
+    for b in sorted(ref):                       # drain: no block leaks
+        for _ in range(ref[b]):
+            a.release(b)
+    a.check()
+    assert a.n_free == 12 - 2
+
+
+# ---------------------------------------------------------------------------
+# Prefix index (content-addressed chain lookup)
+# ---------------------------------------------------------------------------
+def test_prefix_index_chain_match_and_deregister():
+    from repro.serve.kvcache import PrefixIndex
+    ix = PrefixIndex()
+    t = list(range(40))
+    b0 = ix.register(-1, tuple(t[0:4]), 10)
+    b1 = ix.register(b0, tuple(t[4:8]), 11)
+    assert (b0, b1) == (10, 11)
+    assert ix.register(-1, tuple(t[0:4]), 99) == 10   # duplicate: existing wins
+    assert len(ix) == 2
+    chain, partial = ix.match(t[:10], 4)
+    assert chain == [10, 11] and partial is None
+    # a child extends the chain partially
+    ix.register(11, tuple(t[8:12]), 12)
+    chain, partial = ix.match(t[:8] + [8, 9, 77, 78], 4)
+    assert chain == [10, 11] and partial == (12, 2)
+    # divergence inside the chain stops the walk
+    chain, _ = ix.match([0, 1, 2, 3, 4, 99, 6, 7], 4)
+    assert chain == [10]
+    # deregister is recursive: the whole subtree under 10 is forgotten
+    ix.deregister(10)
+    assert len(ix) == 0
+    assert ix.match(t[:10], 4) == ([], None)
+
+
+def test_paged_cache_prefix_sharing_and_cow(layout):
+    from repro.config import reduced
+    from repro.configs.registry import get
+    from repro.serve.kvcache import PagedKVCache
+    cfg = reduced(get("tinyllama-1.1b"))
+    kv = PagedKVCache(cfg, layout, batch_size=2, max_len=64, block=16,
+                      prefix_cache=True)
+    prompt = [3 + j % 13 for j in range(50)]
+    assert kv.admit(0, 64, prompt)
+    assert kv.hit_len(0) == 0 and kv.cow_info(0) is None
+    kv.register_prefix(0)                       # 50 tokens -> 3 full blocks
+    assert len(kv.prefix) == 3
+    kv.release(0)                               # indexed blocks park on LRU
+    kv.allocator.check()
+    # identical prompt: hits 48 of 50 (one tail token must stay fresh)
+    assert kv.admit(1, 64, prompt)
+    assert kv.hit_len(1) == 48 and len(kv._shared[1]) == 3
+    assert kv.cow_info(1) is None
+    shared = list(kv._shared[1])
+    assert all(kv.allocator.refcount(b) == 1 for b in shared)
+    # divergence inside block 3: chain match 2 blocks + partial COW of 8
+    p2 = prompt[:40] + [201, 202, 203, 204]
+    assert kv.admit(0, 64, p2)
+    assert len(kv._shared[0]) == 2
+    src, n = kv.cow_info(0)
+    assert n == 8 and src == shared[2]          # 40 - 2*16 = 8 reused tokens
+    assert kv.hit_len(0) == 40
+    assert kv.allocator.refcount(src) == 2      # slot 1's table + COW pin
+    rows = kv.cow_rows([0])
+    assert rows is not None
+    s, d, keep = rows
+    assert keep[0].sum() == 8 and not keep[1].any()
+    kv.cow_done(0)
+    assert kv.allocator.refcount(src) == 1 and kv.cow_info(0) is None
+    assert kv.lookups == 3 and kv.hits == 2 and kv.tokens_reused == 88
+    kv.release(0)
+    kv.release(1)
+    # exhaustive reallocation evicts every cached block and empties the index
+    assert kv.admit(0, 64) and kv.admit(1, 64)
+    assert len(kv.prefix) == 0 and kv.allocator.n_free == 0
+    assert kv.allocator.evictions >= 3
+    kv.allocator.check()
+
+
+# ---------------------------------------------------------------------------
+# Extend (mid-sequence chunk append) vs full prefill equivalence
+# ---------------------------------------------------------------------------
+def test_extend_matches_prefill(layout):
+    import jax
+    import jax.numpy as jnp
+    from repro.config import reduced
+    from repro.configs.registry import get
+    from repro.core.params import init_params
+    from repro.models import registry, transformer
+    cfg = reduced(get("tinyllama-1.1b"))
+    params = init_params(transformer.abstract_params(cfg, layout),
+                         jax.random.key(0), dtype=jnp.float32)
+    B, L, S = 2, 16, 8
+    rng = np.random.default_rng(3)
+    toks = rng.integers(2, cfg.vocab, (B, L + S)).astype(np.int32)
+    _, kv = transformer.prefill(
+        cfg, layout, params,
+        {"tokens": jnp.asarray(toks[:, :L]),
+         "length": jnp.full((B,), L, jnp.int32)})
+    pos2d = jnp.broadcast_to(jnp.arange(L, dtype=jnp.int32), (B, L))
+    view = registry.pack_prefill_cache(cfg, kv, pos2d)
+    # ragged extend: row 0 appends S fresh tokens, row 1 only 5
+    lens = jnp.asarray([S, 5], jnp.int32)
+    logits, _, _ = transformer.extend(
+        cfg, layout, params,
+        {"tokens": jnp.asarray(toks[:, L:]),
+         "offset": jnp.full((B,), L, jnp.int32), "length": lens}, view)
+    last = jnp.take_along_axis(logits, (lens - 1)[:, None, None], axis=1)[:, 0]
+    ref, _ = transformer.prefill(
+        cfg, layout, params,
+        {"tokens": jnp.asarray(toks), "length": L + lens})
+    diff = float(jnp.max(jnp.abs(last.astype(jnp.float32)
+                                 - ref.astype(jnp.float32))))
+    assert diff < 1e-4, f"extend diverged from full prefill: {diff:.2e}"
+
+
+# ---------------------------------------------------------------------------
+# Engine fast paths: prefix cache and speculative decoding vs the baseline
+# ---------------------------------------------------------------------------
+def test_engine_prefix_and_speculative_match_baseline(layout):
+    import jax
+    import jax.numpy as jnp
+    from repro.config import reduced
+    from repro.configs.registry import get
+    from repro.core.params import init_params
+    from repro.models import transformer
+    from repro.serve import Engine, Request
+    from repro.serve.speculate import DraftSpec
+    cfg = reduced(get("qwen3-4b"))
+    params = init_params(transformer.abstract_params(cfg, layout),
+                         jax.random.key(0), dtype=jnp.float32)
+    shared = list(range(7, 7 + 32))             # two full blocks @ block=16
+    prompts = [shared + [100 + i, 101 + i] for i in range(3)]
+    prompts.append(shared[:20] + [55, 56])      # partial-block COW divergence
+
+    def run(eng):
+        reqs = [Request(uid=i, prompt=list(p), max_new=5)
+                for i, p in enumerate(prompts)]
+        stats = eng.run(reqs)
+        assert all(r.done and not r.error for r in reqs), \
+            [r.error for r in reqs]
+        return [r.out for r in reqs], stats
+
+    base, _ = run(Engine(cfg, layout, params, batch_size=2, max_len=64))
+
+    pfx = Engine(cfg, layout, params, batch_size=2, max_len=64,
+                 prefix_cache=True)
+    out, st = run(pfx)
+    assert out == base, "prefix-cache engine diverged from baseline"
+    assert st["prefix_hits"] >= 2 and st["prefix_tokens_reused"] > 0
+    out2, st2 = run(pfx)                        # warm index: every prompt hits
+    assert out2 == base
+    assert st2["prefix_hits"] == len(prompts)
+    pfx.kv.allocator.check()
+
+    spec = Engine(cfg, layout, params, batch_size=2, max_len=64,
+                  draft=DraftSpec(cfg, layout, params, gamma=3))
+    out3, st3 = run(spec)
+    assert out3 == base, "speculative engine diverged at temperature 0"
+    assert st3["spec_steps"] > 0 and st3["accepted_mean"] >= 1.0
