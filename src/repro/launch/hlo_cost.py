@@ -198,9 +198,14 @@ class HloCost:
                 total += m * 2.0 * _shape_bytes(dt, dims)   # write + read
         return total
 
-    def collective_bytes(self):
-        per_op = {c: 0.0 for c in COLLECTIVES}
-        count = {c: 0 for c in COLLECTIVES}
+    def collectives_detail(self):
+        """One record per collective instruction in the compiled module:
+        ``{name, kind, comp, dtype, shape, out_bytes, group, mult,
+        moved_bytes}`` where ``moved_bytes`` applies the ring formula x the
+        execution multiplier.  ``collective_bytes()`` is the reduction of
+        this; obs/commcheck.py consumes the detail rows directly so the
+        measured-vs-analytic report can show *which* ops carry the volume."""
+        rows = []
         for comp, instrs in self.comps.items():
             m = self.mult.get(comp, 1.0)
             if m == 0:
@@ -232,7 +237,17 @@ class HloCost:
                     moved = out_bytes * (n - 1) / n
                 else:
                     moved = out_bytes
-                per_op[kind] += m * moved
-                count[kind] += int(m)
+                rows.append({"name": name, "kind": kind, "comp": comp,
+                             "dtype": dt, "shape": dims,
+                             "out_bytes": out_bytes, "group": n,
+                             "mult": m, "moved_bytes": m * moved})
+        return rows
+
+    def collective_bytes(self):
+        per_op = {c: 0.0 for c in COLLECTIVES}
+        count = {c: 0 for c in COLLECTIVES}
+        for r in self.collectives_detail():
+            per_op[r["kind"]] += r["moved_bytes"]
+            count[r["kind"]] += int(r["mult"])
         return {"bytes_per_device": sum(per_op.values()),
                 "by_kind": per_op, "counts": count}

@@ -65,6 +65,10 @@ def main(argv=None):
                     help="prepend this many common tokens to every "
                          "synthetic request (exercises the prefix cache)")
     ap.add_argument("--host-devices", type=int, default=0)
+    ap.add_argument("--trace", default="",
+                    help="write a Chrome-trace of the run here (plus a "
+                         "<path>.jsonl event log): one lane per request "
+                         "(queue/prefill/decode spans) + the engine lane")
     args = ap.parse_args(argv)
 
     if args.host_devices:
@@ -119,6 +123,8 @@ def main(argv=None):
         print(f"draft: {draft_cfg.arch} (single-device), "
               f"gamma={args.spec_tokens}")
 
+    from repro.obs import make_tracer
+    tracer = make_tracer(bool(args.trace))
     eng = Engine(cfg, layout, params, batch_size=args.batch_size,
                  max_len=args.max_len, temperature=args.temperature,
                  top_k=args.top_k, top_p=args.top_p, seed=args.seed,
@@ -126,7 +132,7 @@ def main(argv=None):
                  prefill_chunk=args.prefill_chunk,
                  chunked_prefill=not args.no_chunked_prefill,
                  fused_decode=not args.no_fused_decode,
-                 prefix_cache=args.prefix_cache, draft=draft)
+                 prefix_cache=args.prefix_cache, draft=draft, tracer=tracer)
     common = [3 + j % 13 for j in range(args.shared_prefix)]
     reqs = [Request(uid=i,
                     prompt=common + [2 + (i + j) % 17
@@ -140,6 +146,10 @@ def main(argv=None):
         tag = f" [rejected: {r.error}]" if r.error else ""
         print(f"  req {r.uid}: {len(r.prompt)} prompt -> {r.out}{tag}")
     print(format_summary(stats))
+    if args.trace:
+        tracer.write_chrome(args.trace)
+        tracer.write_jsonl(args.trace + ".jsonl")
+        print(f"trace: wrote {args.trace} (+ {args.trace}.jsonl)")
     if stats["tokens"] <= 0:
         sys.exit("no tokens generated")
 

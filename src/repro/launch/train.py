@@ -53,6 +53,16 @@ def main(argv=None):
     ap.add_argument("--data-path", default="")
     ap.add_argument("--host-devices", type=int, default=0,
                     help="force N host platform devices (set before jax init)")
+    ap.add_argument("--trace", default="",
+                    help="write a Chrome-trace of the run here (plus a "
+                         "<path>.jsonl event log; docs/observability.md)")
+    ap.add_argument("--telemetry", default="",
+                    help="per-step telemetry (step time / tokens/s / MFU / "
+                         "memory watermarks / non-finite sentinel); writes "
+                         "the summary JSON here.  NOTE: syncs every step")
+    ap.add_argument("--peak-flops", type=float, default=0,
+                    help="per-device peak FLOP/s for the MFU denominator "
+                         "(default: the nominal TPU v5e constant)")
     args = ap.parse_args(argv)
 
     if args.host_devices:
@@ -70,6 +80,10 @@ def main(argv=None):
     from repro.optim import make_optimizer
     from repro.train.step import make_train_step
     from repro.checkpoint import store
+    from repro.obs import make_tracer
+    from repro.obs.telemetry import DEFAULT_PEAK_FLOPS, TrainTelemetry
+
+    tracer = make_tracer(bool(args.trace))
 
     cfg = get(args.arch)
     if args.reduced:
@@ -122,11 +136,29 @@ def main(argv=None):
     data = TokenStream(cfg, layout, shape,
                        DataConfig(kind=args.data, path=args.data_path))
     it = iter(data)
+    tel = None
+    if args.telemetry:
+        tel = TrainTelemetry(
+            cfg, layout, global_batch=args.batch, seq_len=args.seq,
+            peak_flops_per_device=args.peak_flops or DEFAULT_PEAK_FLOPS,
+            tracer=tracer)
     t0 = time.time()
     losses = []
     for step in range(start, args.steps):
-        batch = next(it)
-        params, opt_state, metrics = step_fn(params, opt_state, batch)
+        with tracer.span("data_next", track="train"):
+            batch = next(it)
+        with tracer.span("train_step", track="train", step=step) as sp:
+            params, opt_state, metrics = step_fn(params, opt_state, batch)
+            if tel is not None:
+                # telemetry's step clock needs device time, so the span
+                # opts into a sync point; trace-only runs stay async
+                sp.sync(metrics["loss"])
+        if tel is not None:
+            tel.record(step, metrics)
+            if tel.nonfinite is not None and "blame" not in tel.nonfinite:
+                tel.nonfinite["blame"] = tel.blame(params)
+                print(f"non-finite loss at step {step+1}: "
+                      f"{tel.nonfinite['blame']}", file=sys.stderr)
         if (step + 1) % args.log_every == 0 or step == start:
             loss = float(metrics["loss"])
             losses.append(loss)
@@ -145,6 +177,14 @@ def main(argv=None):
     else:
         # checkpoint restore already at/after --steps: the loop never ran
         print(f"nothing to do: restored step {start} >= --steps {args.steps}")
+    if tel is not None:
+        tel.write(args.telemetry)
+        print(tel.format_summary(), flush=True)
+        print(f"telemetry: wrote {args.telemetry}")
+    if args.trace:
+        tracer.write_chrome(args.trace)
+        tracer.write_jsonl(args.trace + ".jsonl")
+        print(f"trace: wrote {args.trace} (+ {args.trace}.jsonl)")
     return losses
 
 

@@ -109,6 +109,7 @@ class BlockStack:
     label_len: Callable = None          # cfg, seq -> label sequence length
     act_bytes: Callable = None          # (cfg, layout, b, s) -> per-layer bytes
     carry_bytes: Callable = None        # (cfg, layout, b) -> pipeline carry bytes
+    step_flops: Callable = None         # (cfg, s) -> train FLOPs per token
     # serving-cache hook: "paged" families (text-frontend attention stacks:
     # dense kv / MLA latent, every cache leaf length-indexed) serve through
     # the block-table pool in serve/kvcache.py with chunked prefill;
@@ -123,6 +124,7 @@ class BlockStack:
             "mb_weight": _text_mb_weight, "inputs": _text_inputs,
             "label_len": lambda cfg, s: s, "act_bytes": _residual_act_bytes,
             "carry_bytes": lambda cfg, layout, b: 0,
+            "step_flops": _attn_step_flops,
         }
         for k, v in defaults.items():
             if getattr(self, k) is None:
@@ -470,6 +472,29 @@ def _audio_carry_bytes(cfg, layout, b):
 
 
 # ---------------------------------------------------------------------------
+# Per-family train-FLOPs estimates (the MFU numerator in obs/telemetry.py).
+# FLOPs per trained token at context length s, fwd + bwd counted as 3x the
+# forward (two backward matmul products per forward one): 2 FLOPs per active
+# parameter-MAC plus the attention score/value products, window-clamped.
+# ---------------------------------------------------------------------------
+def _attn_step_flops(cfg, s):
+    ctx = min(s, cfg.window) if cfg.window else s
+    attn = 4.0 * cfg.n_layers * ctx * cfg.n_heads * cfg.head_dim
+    return 3.0 * (2.0 * cfg.n_active_params() + attn)
+
+
+def _ssm_step_flops(cfg, s):
+    # recurrent state updates are linear in s (no quadratic score matmul);
+    # the parameter MACs dominate, the state term rides inside them
+    return 3.0 * 2.0 * cfg.n_active_params()
+
+
+def train_flops_per_token(cfg: ModelConfig, s: int) -> float:
+    """Model FLOPs spent per trained token (family-dispatched estimate)."""
+    return float(get_stack(cfg.family).step_flops(cfg, s))
+
+
+# ---------------------------------------------------------------------------
 # The registry
 # ---------------------------------------------------------------------------
 _DENSE_KIND = BlockKind("dense", _attn_block_params, _attn_block_apply,
@@ -514,7 +539,8 @@ REGISTRY: Dict[Family, BlockStack] = {
     Family.SSM: BlockStack(
         family=Family.SSM,
         kinds={"mlstm": _MLSTM_KIND, "slstm": _SLSTM_KIND},
-        layer_plan=_plan_xlstm, act_bytes=_xlstm_act_bytes),
+        layer_plan=_plan_xlstm, act_bytes=_xlstm_act_bytes,
+        step_flops=_ssm_step_flops),
     Family.VLM: BlockStack(
         family=Family.VLM, kinds={"dense": _DENSE_KIND},
         layer_plan=_plan_dense, frontend=_vlm_frontend, labels=_vlm_labels,

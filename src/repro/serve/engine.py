@@ -40,6 +40,7 @@ from ..core.params import init_params
 from ..core.topology import Layout
 from ..models import blocks as B
 from ..models import registry, transformer
+from ..obs.trace import NULL
 from . import kvcache, sampling, speculate
 from .metrics import ServeMetrics
 from .scheduler import Scheduler, pad_bucket
@@ -73,8 +74,13 @@ class Engine:
                  chunked_prefill: bool = True,
                  fused_decode: Optional[bool] = None,
                  prefix_cache: bool = False,
-                 draft: Optional["speculate.DraftSpec"] = None):
+                 draft: Optional["speculate.DraftSpec"] = None,
+                 tracer=None):
         self.cfg, self.layout, self.params = cfg, layout, params
+        # observability: per-request lifecycle spans are emitted by the
+        # metrics hooks; the engine itself adds one span per device tick on
+        # the "engine" lane.  The default NULL tracer makes all of it free.
+        self.tracer = tracer if tracer is not None else NULL
         self.B, self.max_len = batch_size, max_len
         self.temperature = temperature
         self.paged = registry.serve_cache_mode(cfg) == "paged"
@@ -111,7 +117,7 @@ class Engine:
         self._key = jax.random.key(seed)
         self.scheduler = Scheduler(batch_size, max_len,
                                    chunk_tokens=prefill_chunk)
-        self.metrics = ServeMetrics()
+        self.metrics = ServeMetrics(tracer=self.tracer)
 
         self.pos = np.zeros(batch_size, np.int32)
         self.slots: List[Optional[Request]] = [None] * batch_size
@@ -276,6 +282,7 @@ class Engine:
                     q.appendleft(req)
                     continue
             admitted.append((slot, req))
+            self.metrics.admit(req.uid)
         placed = admitted
         if placed and self.paged:
             # invalidate recycled blocks before anything reads them (the
@@ -332,16 +339,24 @@ class Engine:
         """One engine step: admit waiting work, then either one chunked
         prefill group or one global decode tick."""
         self._admit()
+        tr = self.tracer
         if self.chunked and self.scheduler.pending_prefill:
-            self._prefill_tick()
+            with tr.span("prefill_tick", track="engine"):
+                self._prefill_tick()
             kind = "prefill"
         elif self.spec is not None:
-            self._spec_tick()
+            with tr.span("spec_tick", track="engine"):
+                self._spec_tick()
             kind = "decode"
         else:
-            self._decode_tick()
+            with tr.span("decode_tick", track="engine"):
+                self._decode_tick()
             kind = "decode"
         self.metrics.observe_step(self.scheduler.queue_depth(), kind)
+        if tr.enabled:
+            tr.counter("active_slots",
+                       sum(s is not None for s in self.slots),
+                       track="engine")
         self.steps += 1
 
     def _prefill_tick(self):
@@ -514,7 +529,7 @@ class Engine:
         # per-run metrics: each run() reports exactly its own requests (and
         # drops the previous run's tracking, so a long-lived engine doesn't
         # accumulate per-request state across runs)
-        self.metrics = ServeMetrics()
+        self.metrics = ServeMetrics(tracer=self.tracer)
         if self.paged:
             self.kv.lookups = self.kv.hits = self.kv.tokens_reused = 0
             self.kv.allocator.evictions = 0

@@ -1,54 +1,77 @@
 """Serving metrics: TTFT / TPOT / throughput / queue depth.
 
-The engine calls the ``submit`` / ``first_token`` / ``token`` / ``finish``
-/ ``reject`` hooks as requests move through it and ``observe_step`` once
+The engine calls the ``submit`` / ``admit`` / ``token`` / ``finish`` /
+``reject`` hooks as requests move through it and ``observe_step`` once
 per engine step; ``summary()`` reduces everything to a plain dict
 (p50/p95 latencies in seconds, tok/s, queue-depth histogram) and
 ``format_summary`` renders the launcher's report.  Pure host-side
 bookkeeping — nothing here touches jax.
 
+When a recording tracer (``repro.obs.trace``) is attached, each hook also
+emits the shared obs event schema, so serve runs and train runs produce
+one trace format: per-request lanes ``req<uid>`` carry
+``submit -> queue -> prefill -> decode -> finish`` (queue/prefill/decode
+as retroactive spans from the hook timestamps), ``observe_step`` emits a
+``queue_depth`` counter on the ``engine`` lane.  With the default
+``NULL`` tracer all of that is a no-op.
+
 Definitions:
-  * TTFT  — submit() to first_token() per request (queueing + prefill).
+  * TTFT  — submit() to first token per request (queueing + prefill).
   * TPOT  — (t_last - t_first) / (n_tokens - 1) per request with >= 2
             generated tokens: the steady decode cadence.
+  * queue wait — submit() to admit() (slot placement) per request.
   * throughput — generated tokens / wall seconds over the whole run.
 """
 from __future__ import annotations
 
+import math
 import time
 from typing import Dict, List, Optional
 
 import numpy as np
 
+from ..obs.trace import NULL
+
 
 def percentile(values: List[float], q: float) -> float:
-    """Nearest-rank percentile (0 when empty)."""
-    if not values:
+    """Nearest-rank percentile over the finite values.  Total on the edge
+    cases: empty (or all-non-finite) -> 0.0, single sample -> that sample
+    for every q, q clamped into [0, 100]."""
+    vals = [v for v in values if math.isfinite(v)]
+    if not vals:
         return 0.0
-    return float(np.percentile(values, q, method="nearest"))
+    return float(np.percentile(vals, min(max(q, 0.0), 100.0),
+                               method="nearest"))
 
 
 def histogram(values: List[float], bins: int = 8):
-    """Equal-width histogram -> (edges [bins+1], counts [bins])."""
-    if not values:
+    """Equal-width histogram -> (edges [bins+1], counts [bins]).  Total on
+    the edge cases: empty/all-non-finite -> ([0, 1], [0]); a single sample
+    or an all-equal series gets a unit-width range centred on the value
+    (numpy's degenerate-range padding) with every count in one bin —
+    callers always see len(edges) == bins + 1, sum(counts) == n_finite."""
+    vals = [v for v in values if math.isfinite(v)]
+    if not vals:
         return [0.0, 1.0], [0]
-    counts, edges = np.histogram(values, bins=bins)
+    counts, edges = np.histogram(vals, bins=bins)
     return edges.tolist(), counts.tolist()
 
 
 class _Track:
-    __slots__ = ("t_submit", "t_first", "t_last", "n_tokens")
+    __slots__ = ("t_submit", "t_admit", "t_first", "t_last", "n_tokens")
 
     def __init__(self, t):
         self.t_submit = t
+        self.t_admit: Optional[float] = None
         self.t_first: Optional[float] = None
         self.t_last: Optional[float] = None
         self.n_tokens = 0
 
 
 class ServeMetrics:
-    def __init__(self, clock=time.perf_counter):
+    def __init__(self, clock=time.perf_counter, tracer=None):
         self._clock = clock
+        self.tracer = tracer if tracer is not None else NULL
         self._reqs: Dict[int, _Track] = {}
         self.rejected = 0
         self.completed = 0
@@ -66,10 +89,23 @@ class ServeMetrics:
     # ---- request lifecycle ----
     def submit(self, uid: int):
         self._reqs[uid] = _Track(self._clock())
+        self.tracer.instant("submit", track=f"req{uid}")
 
     def reject(self, uid: int):
         self.rejected += 1
         self._reqs.pop(uid, None)
+        self.tracer.instant("reject", track=f"req{uid}")
+
+    def admit(self, uid: int):
+        """Request placed into a decode slot (queue wait ends here)."""
+        tr = self._reqs.get(uid)
+        if tr is None or tr.t_admit is not None:
+            return
+        tr.t_admit = self._clock()
+        t = self.tracer
+        if t.enabled:
+            t.span_at("queue", t.rel(tr.t_submit), t.rel(tr.t_admit),
+                      track=f"req{uid}")
 
     def token(self, uid: int, n: int = 1):
         tr = self._reqs.get(uid)
@@ -78,11 +114,23 @@ class ServeMetrics:
         now = self._clock()
         if tr.t_first is None:
             tr.t_first = now
+            t = self.tracer
+            if t.enabled:
+                # the prefill span runs admit (or submit, when the engine
+                # never called admit) -> first emitted token
+                t.span_at("prefill", t.rel(tr.t_admit or tr.t_submit),
+                          t.rel(now), track=f"req{uid}")
         tr.t_last = now
         tr.n_tokens += n
 
     def finish(self, uid: int):
         self.completed += 1
+        tr = self._reqs.get(uid)
+        t = self.tracer
+        if t.enabled and tr is not None and tr.t_first is not None:
+            t.span_at("decode", t.rel(tr.t_first), t.rel(tr.t_last),
+                      track=f"req{uid}", tokens=tr.n_tokens)
+            t.instant("finish", track=f"req{uid}")
 
     def spec_accept(self, n: int):
         """Record one verify outcome: n drafts accepted (0..γ)."""
@@ -102,6 +150,8 @@ class ServeMetrics:
             self.prefill_steps += 1
         else:
             self.decode_steps += 1
+        if self.tracer.enabled:
+            self.tracer.counter("queue_depth", queue_depth, track="engine")
 
     # ---- reduction ----
     def summary(self, wall_s: float) -> dict:
@@ -110,8 +160,12 @@ class ServeMetrics:
         tpot = [(t.t_last - t.t_first) / (t.n_tokens - 1)
                 for t in self._reqs.values()
                 if t.t_first is not None and t.n_tokens > 1]
+        qwait = [t.t_admit - t.t_submit for t in self._reqs.values()
+                 if t.t_admit is not None]
         tokens = sum(t.n_tokens for t in self._reqs.values())
         return {
+            "queue_wait_p50_s": percentile(qwait, 50),
+            "queue_wait_p95_s": percentile(qwait, 95),
             "wall_s": wall_s,
             "tokens": tokens,
             "tok_per_s": tokens / wall_s if wall_s > 0 else 0.0,

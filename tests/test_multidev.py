@@ -142,7 +142,13 @@ batch = {
 }
 loss, _ = jax.jit(lambda p, b: transformer.forward(
     cfg, lay, p, b, mode="train"))(params, batch)
-assert jnp.isfinite(loss), f"VLM loss not finite on cube (1,2,2): {loss}"
+if not jnp.isfinite(loss):
+    # the obs sentinel names the first offending pytree path, turning a
+    # bare "loss is nan" into an actionable blame report
+    from repro.obs.telemetry import nonfinite_report
+    raise AssertionError(
+        f"VLM loss not finite on cube (1,2,2): {loss}; "
+        + nonfinite_report(params=params, batch=batch))
 ref, _ = jax.jit(lambda p, b: transformer.forward(
     cfg, single_device_layout("3d"), p, b, mode="train"))(
         jax.device_get(params), batch)

@@ -1,0 +1,186 @@
+#!/usr/bin/env python
+"""Validator for obs trace artifacts (the JSONL event log and the
+Chrome-trace JSON that ``repro.obs.trace.Tracer`` writes).
+
+Usage: ``python tools/check_trace.py trace.json trace.json.jsonl ...`` —
+``.jsonl`` files are validated as event logs, everything else as
+Chrome-trace JSON.  Exits non-zero listing every problem.  Importable from
+tests: ``validate_events`` / ``validate_jsonl`` / ``validate_chrome``
+return a list of problem strings (empty == valid).
+
+Checks:
+  * events well-formed — every record has the schema's required fields
+    with sane types (span: name/track/ts/dur, instant: name/track/ts,
+    counter: name/track/ts/value), no negative times;
+  * spans properly nested per track — two spans on one track either
+    don't overlap or one contains the other (enter/exit discipline);
+  * timestamps monotonic per track — span end times and instant/counter
+    stamps never go backwards in emission order (the tracer appends at
+    span exit, so end times are naturally ordered);
+  * the Chrome-trace document loads and its ``ph:"X"`` events pass the
+    same nesting/monotonicity rules per (pid, tid).
+"""
+from __future__ import annotations
+
+import json
+import sys
+from typing import Dict, List, Tuple
+
+EPS = 1e-9
+EVENT_KINDS = ("span", "instant", "counter")
+
+
+def _check_nesting(spans: List[Tuple[float, float, str]], where: str,
+                   problems: List[str]):
+    """spans: (start, end, name) on one track.  Sorted by start (ties:
+    longer first), a proper trace forms a forest — each span either follows
+    or is contained by the top of the stack."""
+    stack: List[Tuple[float, float, str]] = []
+    for t0, t1, name in sorted(spans, key=lambda s: (s[0], -s[1])):
+        while stack and t0 >= stack[-1][1] - EPS:
+            stack.pop()
+        if stack and t1 > stack[-1][1] + EPS:
+            problems.append(
+                f"{where}: span '{name}' [{t0:.6f}, {t1:.6f}] partially "
+                f"overlaps '{stack[-1][2]}' [{stack[-1][0]:.6f}, "
+                f"{stack[-1][1]:.6f}] (improper nesting)")
+        stack.append((t0, t1, name))
+
+
+def validate_events(events: List[dict]) -> List[str]:
+    """Validate a list of obs-schema events (parsed JSONL lines)."""
+    problems: List[str] = []
+    spans_by_track: Dict[str, List[Tuple[float, float, str]]] = {}
+    last_span_end: Dict[str, float] = {}
+    last_point_ts: Dict[str, float] = {}
+    for i, ev in enumerate(events):
+        where = f"event {i}"
+        if not isinstance(ev, dict):
+            problems.append(f"{where}: not an object")
+            continue
+        kind = ev.get("ev")
+        if kind not in EVENT_KINDS:
+            problems.append(f"{where}: unknown ev {kind!r}")
+            continue
+        name, track = ev.get("name"), ev.get("track")
+        if not isinstance(name, str) or not name:
+            problems.append(f"{where}: missing/empty name")
+            continue
+        if not isinstance(track, str) or not track:
+            problems.append(f"{where}: missing/empty track")
+            continue
+        ts = ev.get("ts")
+        if not isinstance(ts, (int, float)) or ts < -EPS:
+            problems.append(f"{where} ({name}): bad ts {ts!r}")
+            continue
+        if kind == "span":
+            dur = ev.get("dur")
+            if not isinstance(dur, (int, float)) or dur < -EPS:
+                problems.append(f"{where} ({name}): bad dur {dur!r}")
+                continue
+            end = ts + dur
+            if end < last_span_end.get(track, 0.0) - EPS:
+                problems.append(
+                    f"{where} ({name}): span end {end:.6f} precedes an "
+                    f"already-emitted span end on track '{track}' "
+                    f"(non-monotonic)")
+            last_span_end[track] = max(last_span_end.get(track, 0.0), end)
+            spans_by_track.setdefault(track, []).append((ts, end, name))
+        else:
+            if kind == "counter" and \
+                    not isinstance(ev.get("value"), (int, float)):
+                problems.append(f"{where} ({name}): counter without "
+                                f"numeric value")
+                continue
+            if ts < last_point_ts.get(track, 0.0) - EPS:
+                problems.append(
+                    f"{where} ({name}): {kind} ts {ts:.6f} goes backwards "
+                    f"on track '{track}' (non-monotonic)")
+            last_point_ts[track] = max(last_point_ts.get(track, 0.0), ts)
+    for track, spans in spans_by_track.items():
+        _check_nesting(spans, f"track '{track}'", problems)
+    return problems
+
+
+def validate_jsonl(path: str) -> List[str]:
+    events = []
+    problems: List[str] = []
+    with open(path) as f:
+        for n, line in enumerate(f, 1):
+            line = line.strip()
+            if not line:
+                continue
+            try:
+                events.append(json.loads(line))
+            except json.JSONDecodeError as e:
+                problems.append(f"{path}:{n}: not JSON ({e})")
+    return problems + validate_events(events)
+
+
+def validate_chrome(path_or_doc) -> List[str]:
+    """Validate a Chrome-trace JSON file (or an already-loaded document)."""
+    problems: List[str] = []
+    if isinstance(path_or_doc, str):
+        try:
+            with open(path_or_doc) as f:
+                doc = json.load(f)
+        except (OSError, json.JSONDecodeError) as e:
+            return [f"{path_or_doc}: does not load as JSON ({e})"]
+    else:
+        doc = path_or_doc
+    evs = doc.get("traceEvents") if isinstance(doc, dict) else doc
+    if not isinstance(evs, list):
+        return ["chrome trace: no traceEvents list"]
+    spans_by_lane: Dict[Tuple, List[Tuple[float, float, str]]] = {}
+    for i, ev in enumerate(evs):
+        if not isinstance(ev, dict) or "ph" not in ev:
+            problems.append(f"traceEvents[{i}]: no phase (ph)")
+            continue
+        ph = ev["ph"]
+        if ph == "M":
+            continue
+        name = ev.get("name")
+        if not isinstance(name, str) or not name:
+            problems.append(f"traceEvents[{i}]: missing name")
+            continue
+        ts = ev.get("ts")
+        if not isinstance(ts, (int, float)):
+            problems.append(f"traceEvents[{i}] ({name}): missing ts")
+            continue
+        if ph == "X":
+            dur = ev.get("dur")
+            if not isinstance(dur, (int, float)) or dur < -EPS:
+                problems.append(f"traceEvents[{i}] ({name}): X event "
+                                f"without valid dur")
+                continue
+            lane = (ev.get("pid", 0), ev.get("tid", 0))
+            spans_by_lane.setdefault(lane, []).append((ts, ts + dur, name))
+        elif ph == "C" and not isinstance(ev.get("args"), dict):
+            problems.append(f"traceEvents[{i}] ({name}): counter without "
+                            f"args")
+    for lane, spans in spans_by_lane.items():
+        _check_nesting(spans, f"lane pid{lane[0]}/tid{lane[1]}", problems)
+    return problems
+
+
+def main(argv=None) -> int:
+    args = sys.argv[1:] if argv is None else argv
+    if not args:
+        print(__doc__)
+        return 2
+    bad = 0
+    for path in args:
+        problems = (validate_jsonl(path) if path.endswith(".jsonl")
+                    else validate_chrome(path))
+        if problems:
+            bad += 1
+            print(f"{path}: {len(problems)} problem(s)")
+            for p in problems:
+                print(f"  {p}")
+        else:
+            print(f"{path}: ok")
+    return 1 if bad else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
